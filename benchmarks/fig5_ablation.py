@@ -1,0 +1,74 @@
+"""Paper Fig. 5/6/7: ablation of imitation learning and pairwise loss.
+
+Variants: fedrank (full), fedrank-I (no IL), fedrank-P (no rank loss),
+fedrank-IP (plain DQN).  Also emits the per-round reward trace (Fig. 6) and
+test-loss trace (Fig. 7).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.common import build_env, emit_csv
+from benchmarks.table1_selection import pretrained_qnet
+from repro.core import make_fedrank_variant
+
+
+def run_il_objective_ablation(make_server, seed: int = 0, verbose: bool = True):
+    """Fig. 5d axis where it separates most cleanly: IL with the pairwise
+    RankNet objective vs pointwise MSE regression of expert utility —
+    compared on ranking accuracy and top-10 overlap vs the experts."""
+    from repro.core import augment_demonstrations, collect_demonstrations, \
+        pretrain_qnet
+
+    demos = collect_demonstrations(make_server, rounds_per_expert=8)
+    demos = augment_demonstrations(demos, n_synthetic=150, seed=seed)
+    out = []
+    for obj in ("pairwise", "pointwise", "pointwise_raw"):
+        _, hist = pretrain_qnet(demos, steps=800, seed=seed, objective=obj)
+        out.append({"il_objective": obj,
+                    "rank_acc": round(hist["rank_acc"][-1], 4),
+                    "top10_overlap": round(hist["top10_overlap"][-1], 4)})
+        if verbose:
+            print(out[-1], flush=True)
+    return out
+
+
+def run(rounds: int = 25, k: int = 5, n_devices: int = 40, seed: int = 0,
+        verbose: bool = True):
+    make_server, _, _ = build_env(n_devices=n_devices, k=k, rounds=rounds,
+                                  sigma=0.1, seed=seed)
+    run_il_objective_ablation(make_server, seed=seed, verbose=verbose)
+    q, il_hist = pretrained_qnet(make_server)
+    rows: List[Dict] = []
+    traces: List[Dict] = []
+    for variant in ("full", "no_il", "no_rank", "no_il_no_rank"):
+        pol = make_fedrank_variant(variant, q, k=k, seed=seed)
+        srv = make_server(2)
+        hist = srv.run(pol)
+        rows.append({
+            "variant": pol.name,
+            "final_acc": round(hist[-1].acc, 4),
+            "mean_reward": round(sum(r.reward for r in hist) / len(hist), 5),
+            "cum_time_s": round(hist[-1].cum_time, 1),
+            "cum_energy_J": round(hist[-1].cum_energy, 1),
+        })
+        for r in hist:
+            traces.append({"variant": pol.name, "round": r.round,
+                           "acc": round(r.acc, 4),
+                           "reward": round(r.reward, 5),
+                           "test_loss": round(r.test_loss, 4)})
+        if verbose:
+            print(rows[-1], flush=True)
+    return rows, traces, il_hist
+
+
+def main() -> None:
+    rows, traces, il_hist = run()
+    emit_csv(rows, ["variant", "final_acc", "mean_reward", "cum_time_s",
+                    "cum_energy_J"])
+    print()
+    emit_csv(traces, ["variant", "round", "acc", "reward", "test_loss"])
+
+
+if __name__ == "__main__":
+    main()

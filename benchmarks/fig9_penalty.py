@@ -1,0 +1,38 @@
+"""Paper Fig. 9: sensitivity to the latency/energy penalty exponents
+(alpha, beta) in the reward (Eq. 1)."""
+from __future__ import annotations
+
+from benchmarks.common import build_env, emit_csv
+from benchmarks.table1_selection import pretrained_qnet
+from repro.core import FedRankPolicy
+
+
+def run(rounds: int = 20, k: int = 5, n_devices: int = 40, seed: int = 0,
+        verbose: bool = True):
+    rows = []
+    q = None
+    for alpha, beta in ((0.0, 0.0), (1.0, 1.0), (2.0, 2.0), (4.0, 4.0)):
+        make_server, _, _ = build_env(n_devices=n_devices, k=k, rounds=rounds,
+                                      sigma=0.1, seed=seed, alpha=alpha,
+                                      beta=beta)
+        if q is None:
+            q, _ = pretrained_qnet(make_server)
+        srv = make_server(3)
+        hist = srv.run(FedRankPolicy(q, k=k, seed=seed))
+        rows.append({
+            "alpha": alpha, "beta": beta,
+            "final_acc": round(hist[-1].acc, 4),
+            "cum_time_s": round(hist[-1].cum_time, 1),
+            "cum_energy_J": round(hist[-1].cum_energy, 1),
+        })
+        if verbose:
+            print(rows[-1], flush=True)
+    return rows
+
+
+def main() -> None:
+    emit_csv(run(), ["alpha", "beta", "final_acc", "cum_time_s", "cum_energy_J"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Kernel micro-bench: name, us_per_call, derived columns.
+
+On this CPU container the Pallas kernels run in interpret mode (Python), so
+their wall-time is NOT meaningful — the honest perf signal is the XLA
+reference path timing plus the analytic FLOP/byte roofline columns derived
+per call.  Both are emitted; the TPU projection column uses the v5e specs.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.pairwise_rank.ref import pairwise_rank_ref
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    print("name,us_per_call,derived_gflops,tpu_roofline_us")
+
+    # pairwise rank: N=4096 cohort
+    n = 4096
+    s = jnp.asarray(rng.normal(size=n), jnp.float32)
+    t = jnp.asarray(rng.normal(size=n), jnp.float32)
+    m = jnp.ones(n, jnp.float32)
+    f = jax.jit(pairwise_rank_ref)
+    us = _time(f, s, t, m)
+    flops = 10.0 * n * n  # ~10 flops per pair (sigmoid+bce)
+    print(f"pairwise_rank_n4096,{us:.1f},{flops/1e9:.2f},"
+          f"{flops/PEAK_FLOPS*1e6:.2f}")
+
+    # flash attention: B2 S1024 H8 KV2 Dh64 causal
+    b, s_, h, kv, dh = 2, 1024, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(b, s_, h, dh)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s_, kv, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s_, kv, dh)), jnp.float32)
+    f = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    us = _time(f, q, k, v)
+    flops = 2 * 2 * b * h * s_ * s_ * dh / 2  # causal half
+    print(f"flash_attention_s1024,{us:.1f},{flops/1e9:.2f},"
+          f"{flops/PEAK_FLOPS*1e6:.2f}")
+
+    # rwkv6: BH=8 T=512 n=64
+    bh, t_, n_ = 8, 512, 64
+    r = jnp.asarray(rng.normal(size=(bh, t_, n_)), jnp.float32)
+    k2 = jnp.asarray(rng.normal(size=(bh, t_, n_)), jnp.float32)
+    v2 = jnp.asarray(rng.normal(size=(bh, t_, n_)), jnp.float32)
+    lw = jnp.asarray(-np.exp(rng.normal(-2, 1, size=(bh, t_, n_))), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(bh, n_)) * 0.1, jnp.float32)
+    s0 = jnp.zeros((bh, n_, n_), jnp.float32)
+    f = jax.jit(wkv6_ref)
+    us = _time(f, r, k2, v2, lw, u, s0)
+    flops = 4.0 * bh * t_ * n_ * n_
+    print(f"rwkv6_t512,{us:.1f},{flops/1e9:.2f},{flops/PEAK_FLOPS*1e6:.2f}")
+
+
+if __name__ == "__main__":
+    main()

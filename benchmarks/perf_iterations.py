@@ -1,0 +1,111 @@
+"""§Perf hillclimb harness: named iterations over the three chosen
+(arch x shape) pairs, each re-lowered + re-analyzed on the production mesh.
+
+MUST run in its own process (sets the 512-device flag):
+    PYTHONPATH=src python -m benchmarks.perf_iterations --out results/perf.json
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+from typing import Any, Dict
+
+from repro.launch.dryrun import run_one
+from repro.launch.roofline import row_from_record
+
+
+def _summ(rec: Dict[str, Any]) -> Dict[str, Any]:
+    if rec["status"] != "ok":
+        return {"status": rec["status"], "error": rec.get("error", "")[:200]}
+    row = row_from_record(rec)
+    return {
+        "status": "ok",
+        "compute_s": round(row.compute_s, 4),
+        "memory_s": round(row.memory_s, 4),
+        "collective_s": round(row.collective_s, 4),
+        "dominant": row.dominant,
+        "useful_ratio": round(row.useful_ratio, 4),
+        "temp_GB": round(rec.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9, 1),
+        "flops_per_device": rec["hlo"]["flops_per_device"],
+        "bytes_per_device": rec["hlo"]["bytes_per_device"],
+        "convert_bytes_per_device": rec["hlo"].get("convert_bytes_per_device", 0),
+        "collective_wire_bytes": rec["hlo"]["collective_wire_bytes"],
+        "compile_s": rec["compile_s"],
+    }
+
+
+# Each experiment: (pair_name, arch, shape, iteration_name, run_one kwargs)
+EXPERIMENTS = [
+    # ---- pair A: hymba-1.5b train_4k — worst roofline fraction -----------
+    ("hymba_train", "hymba-1.5b", "train_4k", "baseline", {}),
+    ("hymba_train", "hymba-1.5b", "train_4k", "it1_unroll8_mamba_scan",
+     {"cfg_overrides": {"__ssm_unroll": 8}}),
+    ("hymba_train", "hymba-1.5b", "train_4k", "it2_unroll16",
+     {"cfg_overrides": {"__ssm_unroll": 16}}),
+    ("hymba_train", "hymba-1.5b", "train_4k", "it3_unroll8_seqshard",
+     {"cfg_overrides": {"__ssm_unroll": 8}, "seq_shard": True}),
+    # ---- pair B: internvl2-76b train_4k — most collective-bound ----------
+    ("internvl_train", "internvl2-76b", "train_4k", "baseline", {}),
+    ("internvl_train", "internvl2-76b", "train_4k", "it1_seq_shard",
+     {"seq_shard": True}),
+    ("internvl_train", "internvl2-76b", "train_4k", "it2_seq_shard_naive_attn",
+     {"seq_shard": True, "impl": "naive"}),
+    ("internvl_train", "internvl2-76b", "train_4k", "it3_fsdp_on_output",
+     {"seq_shard": True, "fsdp_on_output": True}),
+    ("internvl_train", "internvl2-76b", "train_4k", "it4_weights_tp_only",
+     {"seq_shard": True, "weights_tp_only": True}),
+    # ---- pair C: olmoe-1b-7b train_4k — the MoE/EP technique pair --------
+    ("olmoe_train", "olmoe-1b-7b", "train_4k", "baseline_sort_dispatch", {}),
+    ("olmoe_train", "olmoe-1b-7b", "train_4k", "ref_dense_gshard_dispatch",
+     {"moe_dispatch": "dense"}),
+    ("olmoe_train", "olmoe-1b-7b", "train_4k", "it1_seq_shard",
+     {"seq_shard": True}),
+    ("olmoe_train", "olmoe-1b-7b", "train_4k", "it2_seqshard_cap1.0",
+     {"seq_shard": True, "cfg_overrides": {"__moe_cap": 1.0}}),
+]
+
+
+def _apply_special_overrides(kwargs: Dict[str, Any], arch: str):
+    """Translate pseudo-overrides into dataclass replaces."""
+    import dataclasses
+
+    from repro.configs import get_model_config
+
+    co = dict(kwargs.pop("cfg_overrides", {}) or {})
+    unroll = co.pop("__ssm_unroll", None)
+    cap = co.pop("__moe_cap", None)
+    cfg = get_model_config(arch)
+    changed = dict(co)
+    if unroll is not None:
+        changed["ssm"] = dataclasses.replace(cfg.ssm, scan_unroll=unroll)
+    if cap is not None:
+        changed["moe"] = dataclasses.replace(cfg.moe, capacity_factor=cap)
+    if changed:
+        kwargs["cfg_overrides"] = changed
+    return kwargs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/perf_iterations.json")
+    ap.add_argument("--only", default=None, help="run a single pair")
+    args = ap.parse_args()
+    results = []
+    for pair, arch, shape, it_name, kwargs in EXPERIMENTS:
+        if args.only and pair != args.only:
+            continue
+        kwargs = _apply_special_overrides(dict(kwargs), arch)
+        rec = run_one(arch, shape, **kwargs)
+        summ = _summ(rec)
+        entry = {"pair": pair, "arch": arch, "shape": shape,
+                 "iteration": it_name, **summ}
+        results.append(entry)
+        print(json.dumps(entry), flush=True)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

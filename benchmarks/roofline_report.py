@@ -1,0 +1,31 @@
+"""Render the roofline tables from the dry-run sweep JSON (deliverable g)."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+from repro.launch.roofline import render_table, report_from_json, suggestion
+
+
+def main(path: str = "results/dryrun_baseline.json") -> None:
+    if not os.path.exists(path):
+        print(f"roofline_report: {path} missing — run "
+              f"`python -m repro.launch.dryrun --all --both-meshes --out {path}` first")
+        return
+    rows = report_from_json(path)
+    for mesh in sorted({r.mesh for r in rows}):
+        sub = [r for r in rows if r.mesh == mesh]
+        print(f"\n== mesh {mesh} ({sub[0].chips} chips) ==")
+        print(render_table(sub))
+    # dominant-term summary
+    print("\n== bottleneck summary (single-pod) ==")
+    for r in sorted((r for r in rows if r.mesh == "16x16"),
+                    key=lambda r: -max(r.compute_s, r.memory_s, r.collective_s)):
+        total = max(r.compute_s, r.memory_s, r.collective_s)
+        print(f"{r.arch:26s} {r.shape:12s} dominant={r.dominant:10s} "
+              f"bound={total:9.3f}s useful={r.useful_ratio:5.3f} -> {suggestion(r)}")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun_baseline.json")

@@ -1,0 +1,64 @@
+"""Benchmark entrypoint: one section per paper table/figure + roofline.
+
+``python -m benchmarks.run [--quick]``
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _section(title: str):
+    print(f"\n{'=' * 72}\n== {title}\n{'=' * 72}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds for CI-speed runs")
+    args = ap.parse_args()
+    rounds = 12 if args.quick else 25
+    t0 = time.time()
+
+    _section("Table 1: selection policies (acc / ToA / EoA, IID + non-IID)")
+    from benchmarks import table1_selection
+    table1_selection.run(rounds=rounds)
+
+    _section("Fig 4: IL generalization (single vs multi expert, OOD env)")
+    from benchmarks import fig4_generalization
+    fig4_generalization.run(rounds=max(10, rounds - 5))
+
+    _section("Fig 5/6/7: ablations (-I, -P, -IP)")
+    from benchmarks import fig5_ablation
+    fig5_ablation.run(rounds=rounds)
+
+    _section("Fig 8: probing early-exit latency/energy")
+    from benchmarks import fig8_probing
+    fig8_probing.run()
+
+    _section("Fig 9: penalty factor (alpha/beta) sensitivity")
+    from benchmarks import fig9_penalty
+    fig9_penalty.run(rounds=max(10, rounds - 5))
+
+    _section("Multi-seed variance check (non-IID headline comparison)")
+    from benchmarks import variance_check
+    variance_check.run(rounds=rounds)
+
+    _section("Robustness: device dropout mid-round (beyond-paper)")
+    from benchmarks import robustness_failures
+    robustness_failures.run(rounds=max(10, rounds - 10))
+
+    _section("Kernel micro-bench (CPU ref timing + TPU roofline projection)")
+    from benchmarks import kernel_bench
+    kernel_bench.main()
+
+    _section("Roofline report (from dry-run sweep, if present)")
+    from benchmarks import roofline_report
+    roofline_report.main()
+
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

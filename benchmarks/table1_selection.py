@@ -1,0 +1,93 @@
+"""Paper Table 1: model performance of 8 selection approaches (accuracy,
+relative energy, relative speed) under IID and non-IID splits.
+
+Speed is measured as the paper does: time-to-target-accuracy relative to
+FedAvg (ToA); Energy likewise (EoA).  The synthetic dataset replaces the
+image benchmarks (offline container) — claims validated directionally.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import numpy as np
+
+from benchmarks.common import build_env, emit_csv, time_to_accuracy
+from repro.core import (
+    AFLPolicy,
+    FavorPolicy,
+    FedMarlPolicy,
+    FedRankPolicy,
+    OortPolicy,
+    RandomPolicy,
+    TiFLPolicy,
+    augment_demonstrations,
+    collect_demonstrations,
+    pretrain_qnet,
+)
+
+
+def pretrained_qnet(make_server, rounds_per_expert: int = 8, steps: int = 800,
+                    seed: int = 0):
+    demos = collect_demonstrations(make_server, rounds_per_expert=rounds_per_expert)
+    demos = augment_demonstrations(demos, n_synthetic=150, seed=seed)
+    q, hist = pretrain_qnet(demos, steps=steps, seed=seed)
+    return q, hist
+
+
+def run(rounds: int = 25, k: int = 5, n_devices: int = 40, seed: int = 0,
+        verbose: bool = True) -> List[Dict]:
+    rows = []
+    for setting, sigma in (("iid", None), ("non-iid", 0.1)):
+        make_server, task, data = build_env(n_devices=n_devices, k=k,
+                                            rounds=rounds, sigma=sigma, seed=seed)
+        make_prox, _, _ = build_env(n_devices=n_devices, k=k, rounds=rounds,
+                                    sigma=sigma, seed=seed, prox_mu=0.1)
+        q, _ = pretrained_qnet(make_server)
+        policies = [
+            ("fedavg", make_server, lambda: RandomPolicy("fedavg")),
+            ("fedprox", make_prox, lambda: RandomPolicy("fedprox")),
+            ("afl", make_server, lambda: AFLPolicy()),
+            ("tifl", make_server, lambda: TiFLPolicy()),
+            ("oort", make_server, lambda: OortPolicy()),
+            ("favor", make_server, lambda: FavorPolicy(seed=seed)),
+            ("fedmarl", make_server, lambda: FedMarlPolicy()),
+            ("fedrank", make_server, lambda: FedRankPolicy(q, k=k, seed=seed)),
+        ]
+        base_hist = None
+        for name, mk, mkpol in policies:
+            srv = mk(1)
+            hist = srv.run(mkpol())
+            if name == "fedavg":
+                base_hist = hist
+            # target = 95% of fedavg's final accuracy (paper uses fixed targets)
+            target = 0.95 * base_hist[-1].acc
+            t_toa, e_eoa, r_toa = time_to_accuracy(hist, target)
+            t_base, e_base, _ = time_to_accuracy(base_hist, target)
+            row = {
+                "setting": setting,
+                "policy": name,
+                "final_acc": round(hist[-1].acc, 4),
+                "cum_time_s": round(hist[-1].cum_time, 1),
+                "cum_energy_J": round(hist[-1].cum_energy, 1),
+                "toa_s": round(t_toa, 1) if t_toa else "n/a",
+                "eoa_J": round(e_eoa, 1) if e_eoa else "n/a",
+                "speedup_vs_fedavg": (round(t_base / t_toa, 2)
+                                      if t_toa and t_base else "n/a"),
+                "energy_vs_fedavg": (round(e_eoa / e_base, 3)
+                                     if e_eoa and e_base else "n/a"),
+            }
+            rows.append(row)
+            if verbose:
+                print(row, flush=True)
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    emit_csv(rows, ["setting", "policy", "final_acc", "toa_s", "eoa_J",
+                    "speedup_vs_fedavg", "energy_vs_fedavg",
+                    "cum_time_s", "cum_energy_J"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Multi-seed variance check on the headline non-IID comparison.
+
+Single-seed orderings at this scale can be noisy; this reruns
+fedavg / oort / fedrank over several seeds (fresh device pools + round
+dynamics, same data partition) and reports mean ± std of final accuracy,
+cumulative time and energy.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import build_env, emit_csv
+from benchmarks.table1_selection import pretrained_qnet
+from repro.core import FedRankPolicy, OortPolicy, RandomPolicy
+
+
+def run(rounds: int = 25, k: int = 5, n_devices: int = 40,
+        seeds=(1, 2, 3), verbose: bool = True):
+    make_server, _, _ = build_env(n_devices=n_devices, k=k, rounds=rounds,
+                                  sigma=0.1, seed=0)
+    q, _ = pretrained_qnet(make_server)
+    agg = {}
+    for seed in seeds:
+        for mk in (lambda: RandomPolicy(), lambda: OortPolicy(),
+                   lambda: FedRankPolicy(q, k=k, seed=seed)):
+            pol = mk()
+            hist = make_server(seed).run(pol)
+            agg.setdefault(pol.name, []).append(
+                (hist[-1].acc, hist[-1].cum_time, hist[-1].cum_energy))
+    rows = []
+    for name, vals in agg.items():
+        a, t, e = map(np.asarray, zip(*vals))
+        rows.append({
+            "policy": name, "n_seeds": len(vals),
+            "acc_mean": round(a.mean(), 4), "acc_std": round(a.std(), 4),
+            "time_mean_s": round(t.mean(), 1), "time_std": round(t.std(), 1),
+            "energy_mean_J": round(e.mean(), 1), "energy_std": round(e.std(), 1),
+        })
+        if verbose:
+            print(rows[-1], flush=True)
+    return rows
+
+
+def main() -> None:
+    emit_csv(run(), ["policy", "n_seeds", "acc_mean", "acc_std",
+                     "time_mean_s", "time_std", "energy_mean_J", "energy_std"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""repro — FedRank (ICML 2024) reproduction + multi-pod JAX framework.
+
+Subpackages:
+    configs     assigned architectures + input shapes
+    models      unified model zoo (dense/MoE/SSM/hybrid/VLM/enc-dec)
+    kernels     Pallas TPU kernels (pairwise_rank, flash_attention, rwkv6, mamba)
+    optim       raw-JAX optimizers and schedules
+    data        synthetic datasets + Dirichlet federated partitioning
+    checkpoint  msgpack+zstd pytree checkpoints
+    fl          FL substrate (device simulator, client, server, aggregation)
+    core        the paper: ranking Q-net, pairwise loss, IL, online DQN,
+                all baseline selection policies
+    launch      production meshes, GSPMD shardings, dry-run, roofline,
+                train/serve drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,82 @@
+"""Msgpack+zstd pytree checkpointing (orbax is not available offline).
+
+Arrays are serialized as (dtype, shape, raw bytes); the tree structure is
+encoded as nested msgpack maps/lists.  Works for params, optimizer state, and
+the FedRank Q-network / replay buffer alike.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional
+
+import msgpack
+import numpy as np
+import zstandard
+
+_ARR_KEY = "__ndarray__"
+_TUPLE_KEY = "__tuple__"
+
+
+def _encode(obj: Any) -> Any:
+    if isinstance(obj, (np.ndarray, np.generic)) or hasattr(obj, "__array__"):
+        arr = np.asarray(obj)
+        return {_ARR_KEY: True, "dtype": str(arr.dtype), "shape": list(arr.shape),
+                "data": arr.tobytes()}
+    if isinstance(obj, dict):
+        return {str(k): _encode(v) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return {_TUPLE_KEY: [_encode(v) for v in obj],
+                "cls": type(obj).__name__}
+    if isinstance(obj, list):
+        return [_encode(v) for v in obj]
+    if obj is None or isinstance(obj, (bool, int, float, str, bytes)):
+        return obj
+    raise TypeError(f"cannot checkpoint object of type {type(obj)}")
+
+
+def _decode(obj: Any) -> Any:
+    if isinstance(obj, dict):
+        if obj.get(_ARR_KEY):
+            arr = np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"]))
+            return arr.reshape(obj["shape"]).copy()
+        if _TUPLE_KEY in obj:
+            return tuple(_decode(v) for v in obj[_TUPLE_KEY])
+        return {k: _decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(v) for v in obj]
+    return obj
+
+
+def save_pytree(tree: Any, path: str) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # pull device arrays to host
+    import jax
+
+    host = jax.tree.map(lambda x: np.asarray(x), tree)
+    payload = msgpack.packb(_encode(host), use_bin_type=True)
+    comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(comp)
+    os.replace(tmp, path)
+
+
+def load_pytree(path: str) -> Any:
+    with open(path, "rb") as f:
+        comp = f.read()
+    payload = zstandard.ZstdDecompressor().decompress(comp)
+    return _decode(msgpack.unpackb(payload, raw=False))
+
+
+def latest_checkpoint(ckpt_dir: str, prefix: str = "step_") -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    best, best_step = None, -1
+    pat = re.compile(re.escape(prefix) + r"(\d+)\.ckpt$")
+    for name in os.listdir(ckpt_dir):
+        m = pat.match(name)
+        if m and int(m.group(1)) > best_step:
+            best_step = int(m.group(1))
+            best = os.path.join(ckpt_dir, name)
+    return best

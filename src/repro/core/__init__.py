@@ -1,0 +1,37 @@
+"""FedRank core: the paper's contribution as a composable module."""
+from repro.core.baselines import (
+    AFLPolicy,
+    ExpertPolicy,
+    FavorPolicy,
+    FedMarlPolicy,
+    OortPolicy,
+    RandomPolicy,
+    TiFLPolicy,
+)
+from repro.core.fedrank import FedRankPolicy, make_fedrank_variant
+from repro.core.features import FEATURE_DIM, STATE_DIM, featurize
+from repro.core.imitation import (
+    Demonstration,
+    augment_demonstrations,
+    collect_demonstrations,
+    pretrain_qnet,
+)
+from repro.core.qnet import apply_qnet, init_qnet, soft_update
+from repro.core.ranking import (
+    pairwise_bce,
+    pairwise_bce_hard,
+    pairwise_soft_targets,
+    ranking_accuracy,
+    topk_overlap,
+)
+
+__all__ = [
+    "RandomPolicy", "AFLPolicy", "TiFLPolicy", "OortPolicy", "FavorPolicy",
+    "FedMarlPolicy", "ExpertPolicy", "FedRankPolicy", "make_fedrank_variant",
+    "featurize", "STATE_DIM", "FEATURE_DIM",
+    "init_qnet", "apply_qnet", "soft_update",
+    "pairwise_bce", "pairwise_bce_hard", "pairwise_soft_targets",
+    "ranking_accuracy", "topk_overlap",
+    "Demonstration", "collect_demonstrations", "augment_demonstrations",
+    "pretrain_qnet",
+]

@@ -1,0 +1,219 @@
+"""Baseline selection policies (paper §4.1 baselines A/B/C).
+
+A. Random:   FedAvg (uniform random), FedProx (random + proximal local
+             objective — the prox term itself is FLConfig.prox_mu).
+B. Heuristic: AFL (loss-conditioned sampling), TiFL (latency tiers),
+             Oort (utility = statistical x system, Eq. 10).
+C. Learning: Favor-like (pointwise double-DQN over bookkeeping states),
+             FedMarl-like (probing + its reward terms as a greedy score).
+
+All policies implement the ``SelectionPolicy`` protocol of
+:mod:`repro.fl.server`.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import experts
+from repro.core.features import featurize
+from repro.core.qnet import apply_qnet, init_qnet, soft_update
+from repro.fl.server import RoundContext, RoundResult
+
+
+class _Base:
+    needs_probing = False
+
+    def probe_set(self, ctx: RoundContext) -> np.ndarray:
+        m = min(ctx.n, max(ctx.k, int(round(ctx.k * 3.0))))
+        return ctx.rng.choice(ctx.n, size=m, replace=False)
+
+    def observe(self, ctx, result, probe_ids, probe_states) -> None:
+        pass
+
+
+class RandomPolicy(_Base):
+    """FedAvg / FedProx selection: uniform random K of N."""
+
+    def __init__(self, name: str = "fedavg"):
+        self.name = name
+
+    def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
+        return ctx.rng.choice(ctx.n, size=ctx.k, replace=False)
+
+
+class AFLPolicy(_Base):
+    """Active FL: sample with probability conditioned on the current model's
+    per-client valuation (training loss as informativeness), with a softmax
+    temperature and an eps floor of uniform exploration."""
+
+    name = "afl"
+
+    def __init__(self, temperature: float = 0.5, eps: float = 0.2):
+        self.temperature = temperature
+        self.eps = eps
+
+    def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
+        val = ctx.last_loss / max(ctx.last_loss.std(), 1e-9)
+        p = np.exp((val - val.max()) / self.temperature)
+        p = (1 - self.eps) * p / p.sum() + self.eps / ctx.n
+        p /= p.sum()
+        return ctx.rng.choice(ctx.n, size=ctx.k, replace=False, p=p)
+
+
+class TiFLPolicy(_Base):
+    """Tier-based FL: devices bucketed into latency tiers; each round one
+    tier is chosen (credit-decayed adaptive schedule) and K devices are
+    sampled within it — bounding intra-round straggling."""
+
+    name = "tifl"
+
+    def __init__(self, n_tiers: int = 5):
+        self.n_tiers = n_tiers
+        self.credits: Optional[np.ndarray] = None
+        self.tier_of: Optional[np.ndarray] = None
+        self.last_acc = 0.0
+        self.tier_gain = None
+        self._last_tier = 0
+
+    def _build(self, ctx: RoundContext):
+        order = np.argsort(ctx.est_t_round)
+        self.tier_of = np.zeros(ctx.n, int)
+        for t, chunk in enumerate(np.array_split(order, self.n_tiers)):
+            self.tier_of[chunk] = t
+        self.credits = np.full(self.n_tiers, float(ctx.round + 100))
+        self.tier_gain = np.ones(self.n_tiers)
+
+    def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
+        if self.tier_of is None:
+            self._build(ctx)
+        probs = self.tier_gain * (self.credits > 0)
+        if probs.sum() <= 0:
+            probs = np.ones(self.n_tiers)
+        probs = probs / probs.sum()
+        tier = int(ctx.rng.choice(self.n_tiers, p=probs))
+        self._last_tier = tier
+        members = np.where(self.tier_of == tier)[0]
+        if len(members) < ctx.k:
+            extra = np.setdiff1d(np.arange(ctx.n), members)
+            members = np.concatenate([members, extra])
+        self.credits[tier] -= 1
+        return ctx.rng.choice(members, size=ctx.k, replace=False)
+
+    def observe(self, ctx, result: RoundResult, probe_ids, probe_states) -> None:
+        gain = max(result.d_acc, 1e-4)
+        self.tier_gain[self._last_tier] = 0.7 * self.tier_gain[self._last_tier] + 0.3 * gain / 1e-2
+
+
+class OortPolicy(_Base):
+    """Oort: utility-driven selection with epsilon-greedy exploration of
+    rarely-observed clients (the paper's exploitation/exploration split)."""
+
+    name = "oort"
+
+    def __init__(self, alpha: float = 2.0, explore_frac: float = 0.2):
+        self.alpha = alpha
+        self.explore_frac = explore_frac
+
+    def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
+        states = np.stack([
+            ctx.est_t_round / 5.0,                 # est per-epoch compute time
+            ctx.sys.t_comm, ctx.sys.e_comp, ctx.sys.e_comm,
+            ctx.last_loss, ctx.data_sizes.astype(float)], axis=1)
+        util = experts.oort_utility(states, l_ep=5, alpha=self.alpha)
+        # oort's over-participation decay + staleness exploration bonus
+        util = util / np.sqrt(1.0 + ctx.selection_count)
+        util = util * (1.0 + 0.1 * np.sqrt(ctx.loss_age / (1.0 + ctx.round)))
+        n_explore = int(round(self.explore_frac * ctx.k))
+        n_exploit = ctx.k - n_explore
+        chosen = list(np.argsort(-util)[:n_exploit])
+        rest = np.setdiff1d(np.arange(ctx.n), chosen)
+        if n_explore > 0:
+            chosen += list(ctx.rng.choice(rest, size=n_explore, replace=False))
+        return np.asarray(chosen)
+
+
+class FavorPolicy(_Base):
+    """Favor-like: pointwise double-DQN over bookkeeping states (no probing,
+    no ranking loss) — the representative pointwise learning baseline."""
+
+    name = "favor"
+
+    def __init__(self, seed: int = 0, lr: float = 1e-3, gamma: float = 0.9,
+                 eps: float = 0.3, eps_decay: float = 0.97):
+        key = jax.random.PRNGKey(seed)
+        self.q = init_qnet(key)
+        self.q_target = jax.tree.map(jnp.copy, self.q)
+        self.lr, self.gamma = lr, gamma
+        self.eps, self.eps_decay = eps, eps_decay
+        self._prev = None  # (feats, action_mask)
+        self._steps = 0
+
+        def loss_fn(q, feats, act_mask, target):
+            qs = apply_qnet(q, feats)
+            pred = jnp.sum(qs * act_mask)
+            return jnp.square(pred - target)
+
+        self._grad = jax.jit(jax.value_and_grad(loss_fn))
+
+    def _bookkeeping_states(self, ctx: RoundContext) -> np.ndarray:
+        return np.stack([
+            ctx.est_t_round / 5.0, ctx.sys.t_comm, ctx.sys.e_comp,
+            ctx.sys.e_comm, ctx.last_loss, ctx.data_sizes.astype(float)], axis=1)
+
+    def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
+        feats = featurize(self._bookkeeping_states(ctx))
+        qs = np.asarray(apply_qnet(self.q, jnp.asarray(feats)))
+        if ctx.rng.random() < self.eps:
+            return ctx.rng.choice(ctx.n, size=ctx.k, replace=False)
+        return np.argsort(-qs)[:ctx.k]
+
+    def observe(self, ctx, result: RoundResult, probe_ids, probe_states) -> None:
+        feats = featurize(self._bookkeeping_states(ctx))
+        act = np.zeros(ctx.n, np.float32)
+        act[result.selected] = 1.0
+        if self._prev is not None:
+            pfeats, pact, prew = self._prev
+            q_next = np.asarray(apply_qnet(self.q_target, jnp.asarray(feats)))
+            boot = np.sort(q_next)[-ctx.k:].sum()
+            target = prew + self.gamma * boot
+            _, g = self._grad(self.q, jnp.asarray(pfeats), jnp.asarray(pact),
+                              jnp.asarray(target, jnp.float32))
+            self.q = jax.tree.map(lambda p, gr: p - self.lr * gr, self.q, g)
+            self._steps += 1
+            if self._steps % 10 == 0:
+                self.q_target = soft_update(self.q_target, self.q, 1.0)
+        self._prev = (feats, act, result.reward)
+        self.eps *= self.eps_decay
+
+
+class FedMarlPolicy(_Base):
+    """FedMarl-like: probing (its H^p term) + greedy score from its reward
+    terms (accuracy-gain proxy, latency, comm cost)."""
+
+    name = "fedmarl"
+    needs_probing = True
+
+    def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
+        util = experts.fedmarl_utility(probe_states, l_ep=5)
+        order = np.argsort(-util)[:ctx.k]
+        return probe_ids[order]
+
+
+class ExpertPolicy(_Base):
+    """Wraps any analytical expert scorer as a probing policy (used to
+    generate IL demonstrations and as an upper-baseline)."""
+
+    needs_probing = True
+
+    def __init__(self, expert_name: str, l_ep: int = 5):
+        self.name = f"expert-{expert_name}"
+        self.expert_name = expert_name
+        self.l_ep = l_ep
+
+    def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
+        util = experts.expert_scores(self.expert_name, probe_states, l_ep=self.l_ep)
+        return probe_ids[np.argsort(-util)[:ctx.k]]

@@ -1,0 +1,126 @@
+"""Online double-Q learning for FedRank (paper §3.3 + §3.4).
+
+The "Profiler Cache" replay buffer stores per-round transitions
+<s_t, a_t, r_t, s_{t+1}> over the probed cohort; the TD loss uses the VDN
+sum of selected devices' Q-values (Eq. 2) with a periodically-copied target
+network, and the joint objective adds the pairwise RankNet term (Eq. 5):
+
+    L = L_RL + eps * L_Rank
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import FEATURE_DIM, featurize
+from repro.core.qnet import apply_qnet
+from repro.core.ranking import pairwise_bce, pairwise_soft_targets
+
+MAX_COHORT = 64
+
+
+@dataclass
+class Transition:
+    feats: np.ndarray        # (MAX_COHORT, F)
+    mask: np.ndarray         # (MAX_COHORT,)
+    action: np.ndarray       # (MAX_COHORT,) 0/1
+    reward: float
+    next_feats: np.ndarray   # (MAX_COHORT, F)
+    next_mask: np.ndarray    # (MAX_COHORT,)
+    k: int
+
+
+def pad_cohort(feats: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    m = len(feats)
+    assert m <= MAX_COHORT, f"cohort {m} exceeds MAX_COHORT {MAX_COHORT}"
+    out = np.zeros((MAX_COHORT, FEATURE_DIM), np.float32)
+    out[:m] = feats
+    mask = np.zeros((MAX_COHORT,), np.float32)
+    mask[:m] = 1.0
+    return out, mask
+
+
+class ReplayBuffer:
+    """The Profiler Cache."""
+
+    def __init__(self, capacity: int = 512, seed: int = 0):
+        self.capacity = capacity
+        self.items: List[Transition] = []
+        self.rng = np.random.default_rng(seed)
+
+    def add(self, tr: Transition) -> None:
+        if len(self.items) >= self.capacity:
+            self.items.pop(0)
+        self.items.append(tr)
+
+    def sample(self, n: int) -> List[Transition]:
+        n = min(n, len(self.items))
+        # with-replacement sampling once the buffer is small keeps early
+        # online training active (the paper trains from round ~1)
+        replace = len(self.items) < n * 2
+        idx = self.rng.choice(len(self.items), size=n, replace=replace)
+        return [self.items[i] for i in idx]
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+
+def make_td_train_step(gamma: float, rank_eps: float, k: int, lr: float):
+    """Builds the jitted joint-loss gradient step over a batch of
+    transitions. Batch arrays: feats (B,M,F), mask (B,M), action (B,M),
+    reward (B,), next_feats (B,M,F), next_mask (B,M)."""
+
+    def loss_fn(q, q_target, batch):
+        feats, mask, action, reward, nfeats, nmask = batch
+
+        def per_transition(f, m, a, r, nf, nm):
+            qs = apply_qnet(q, f)                      # (M,)
+            pred = jnp.sum(qs * a)                     # VDN over selected
+            # double-Q bootstrap: online net picks top-k, target net evaluates
+            nq_online = apply_qnet(q, nf) - 1e9 * (1 - nm)
+            _, top = jax.lax.top_k(nq_online, k)
+            nq_target = apply_qnet(q_target, nf)
+            boot = jnp.sum(nq_target[top])
+            target = r + gamma * boot
+            l_rl = jnp.square(pred - jax.lax.stop_gradient(target))
+            # pairwise rank term against target-net pair probabilities (Eq. 3)
+            qt = apply_qnet(q_target, f)
+            l_rank = pairwise_bce(qs, jax.lax.stop_gradient(
+                pairwise_soft_targets(qt)), m)
+            return l_rl + rank_eps * l_rank, (l_rl, l_rank)
+
+        losses, (rl, rank) = jax.vmap(per_transition)(feats, mask, action,
+                                                      reward, nfeats, nmask)
+        return losses.mean(), {"l_rl": rl.mean(), "l_rank": rank.mean()}
+
+    @jax.jit
+    def step(q, q_target, opt_m, opt_v, t, batch):
+        (loss, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(q, q_target, batch)
+        # inline Adam
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        t = t + 1
+        opt_m = jax.tree.map(lambda m, gr: b1 * m + (1 - b1) * gr, opt_m, g)
+        opt_v = jax.tree.map(lambda v, gr: b2 * v + (1 - b2) * gr * gr, opt_v, g)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+        q = jax.tree.map(
+            lambda p, m, v: p - lr * (m / bc1) / (jnp.sqrt(v / bc2) + eps),
+            q, opt_m, opt_v)
+        return q, opt_m, opt_v, t, loss, aux
+
+    return step
+
+
+def batch_transitions(trs: List[Transition]):
+    return (
+        jnp.asarray(np.stack([t.feats for t in trs])),
+        jnp.asarray(np.stack([t.mask for t in trs])),
+        jnp.asarray(np.stack([t.action for t in trs])),
+        jnp.asarray(np.array([t.reward for t in trs], np.float32)),
+        jnp.asarray(np.stack([t.next_feats for t in trs])),
+        jnp.asarray(np.stack([t.next_mask for t in trs])),
+    )

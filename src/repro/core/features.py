@@ -1,0 +1,43 @@
+"""State featurization for the selection Q-network.
+
+The raw 6-dim device state (paper §3.1) spans many orders of magnitude
+(seconds vs joules vs sample counts), and its absolute scale depends on the
+model/dataset being trained.  Since FedRank only needs the *ranking* within a
+cohort, features are log-compressed then z-scored per cohort — this is what
+lets one pre-trained Q-net generalize to unseen (OOD) deployments.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+STATE_DIM = 6           # (T_comp, T_comm, E_comp, E_comm, L_i, D_i)
+FEATURE_DIM = 6
+
+
+def featurize(states: np.ndarray) -> np.ndarray:
+    """states: (M, 6) raw -> (M, 6) cohort-normalized features (numpy)."""
+    s = np.asarray(states, np.float64)
+    f = np.concatenate([
+        np.log1p(np.maximum(s[:, 0:4], 0.0)),       # latencies/energies
+        s[:, 4:5],                                   # training loss (already ~O(1))
+        np.log1p(np.maximum(s[:, 5:6], 0.0)),        # data size
+    ], axis=1)
+    mu = f.mean(axis=0, keepdims=True)
+    sd = f.std(axis=0, keepdims=True) + 1e-6
+    return ((f - mu) / sd).astype(np.float32)
+
+
+def featurize_jnp(states: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
+    """Traced variant with a validity mask (M,) for padded cohorts."""
+    s = states.astype(jnp.float32)
+    f = jnp.concatenate([
+        jnp.log1p(jnp.maximum(s[:, 0:4], 0.0)),
+        s[:, 4:5],
+        jnp.log1p(jnp.maximum(s[:, 5:6], 0.0)),
+    ], axis=1)
+    w = mask[:, None].astype(jnp.float32)
+    denom = jnp.maximum(w.sum(), 1.0)
+    mu = (f * w).sum(0, keepdims=True) / denom
+    var = ((f - mu) ** 2 * w).sum(0, keepdims=True) / denom
+    return ((f - mu) / jnp.sqrt(var + 1e-6)) * w

@@ -1,0 +1,166 @@
+"""FedRank — the paper's selection policy, end to end.
+
+Probing cohort -> cohort-normalized features -> per-device Q-net -> top-K,
+with (a) IL-pretrained initialization (Alg. 1), (b) online double-Q TD
+refinement with the Profiler Cache (Eq. 2), and (c) the pairwise RankNet term
+in the joint loss (Eq. 5).  Ablation flags reproduce FedRank^{-I} (no IL),
+FedRank^{-P} (no pairwise loss) and FedRank^{-IP}.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dqn import (
+    MAX_COHORT,
+    ReplayBuffer,
+    Transition,
+    batch_transitions,
+    make_td_train_step,
+    pad_cohort,
+)
+from repro.core.features import featurize
+from repro.core.qnet import apply_qnet, init_qnet, soft_update
+from repro.fl.server import RoundContext, RoundResult
+
+
+class FedRankPolicy:
+    needs_probing = True
+
+    def __init__(
+        self,
+        qnet_params=None,              # IL-pretrained params (None => cold start)
+        *,
+        seed: int = 0,
+        gamma: float = 0.9,
+        rank_eps: float = 0.5,         # epsilon in L = L_RL + eps * L_Rank
+        lr: float = 5e-4,
+        explore_eps: float = 0.1,
+        explore_decay: float = 0.95,
+        target_period: int = 5,
+        replay_capacity: int = 512,
+        train_batch: int = 8,
+        train_steps_per_round: int = 4,
+        probe_factor: float = 2.5,
+        online: bool = True,
+        use_rank_loss: bool = True,
+        k: int = 10,
+        name: str = "fedrank",
+    ):
+        self.name = name
+        key = jax.random.PRNGKey(seed)
+        self.q = (jax.tree.map(jnp.copy, qnet_params)
+                  if qnet_params is not None else init_qnet(key))
+        self.q_target = jax.tree.map(jnp.copy, self.q)
+        self.gamma = gamma
+        self.rank_eps = rank_eps if use_rank_loss else 0.0
+        self.explore_eps = explore_eps
+        self.explore_decay = explore_decay
+        self.target_period = target_period
+        self.train_batch = train_batch
+        self.train_steps_per_round = train_steps_per_round
+        self.probe_factor = probe_factor
+        self.online = online
+        self.replay = ReplayBuffer(replay_capacity, seed=seed + 3)
+        self._train_step = make_td_train_step(gamma, self.rank_eps, k, lr)
+        self._opt_m = jax.tree.map(jnp.zeros_like, self.q)
+        self._opt_v = jax.tree.map(jnp.zeros_like, self.q)
+        self._opt_t = jnp.zeros((), jnp.int32)
+        self._rounds_seen = 0
+        self._pending = None          # (feats, mask, action) awaiting next state
+        self.metrics: Dict[str, List[float]] = {"loss": [], "l_rl": [], "l_rank": []}
+
+    # ------------------------------------------------------------------
+    def probe_set(self, ctx: RoundContext) -> np.ndarray:
+        """Provisional candidates to probe (paper §3.1): rank ALL devices on
+        *bookkeeping* states (static estimates + last observed loss) with the
+        current Q-net, probe the top candidates plus a few explorers — the
+        probe then reveals true runtime state for the final top-K cut."""
+        m = min(ctx.n, MAX_COHORT, max(ctx.k, int(round(ctx.k * self.probe_factor))))
+        book = np.stack([
+            ctx.est_t_round / 5.0, ctx.sys.t_comm,   # comm is load-independent
+            ctx.est_e_round / 5.0, ctx.sys.e_comm,
+            ctx.last_loss, ctx.data_sizes.astype(float)], axis=1)
+        feats = featurize(book)
+        qs = np.asarray(apply_qnet(self.q, jnp.asarray(feats)))
+        # over-participation decay mirrors the experts' fairness behavior
+        qs = qs - 0.05 * np.sqrt(ctx.selection_count)
+        n_explore = max(1, m // 5)
+        top = list(np.argsort(-qs)[: m - n_explore])
+        # exploration probes avoid known stragglers: probing cost is
+        # T_prob = max over the cohort, so one slow explorer taxes the whole
+        # round — sample explorers from the faster half of the pool
+        fast = np.where(ctx.est_t_round <= np.percentile(ctx.est_t_round, 60))[0]
+        rest = np.setdiff1d(fast, top)
+        if len(rest) == 0:
+            rest = np.setdiff1d(np.arange(ctx.n), top)
+        if len(rest) and n_explore:
+            top += list(ctx.rng.choice(rest, size=min(n_explore, len(rest)),
+                                       replace=False))
+        return np.asarray(top)
+
+    def select(self, ctx: RoundContext, probe_ids: np.ndarray,
+               probe_states: np.ndarray) -> np.ndarray:
+        feats = featurize(probe_states)
+        qs = np.asarray(apply_qnet(self.q, jnp.asarray(feats)))
+        order = np.argsort(-qs)
+        chosen = list(order[:ctx.k])
+        # epsilon-greedy: swap a random tail element in occasionally
+        if ctx.rng.random() < self.explore_eps and len(order) > ctx.k:
+            swap_out = int(ctx.rng.integers(ctx.k))
+            swap_in = int(ctx.rng.integers(ctx.k, len(order)))
+            chosen[swap_out] = order[swap_in]
+        self._last = (feats, probe_ids, np.asarray(chosen))
+        return probe_ids[np.asarray(chosen)]
+
+    # ------------------------------------------------------------------
+    def observe(self, ctx: RoundContext, result: RoundResult,
+                probe_ids: Optional[np.ndarray],
+                probe_states: Optional[np.ndarray]) -> None:
+        if probe_states is None:
+            return
+        feats = featurize(probe_states)
+        pf, pmask = pad_cohort(feats)
+        if self._pending is not None:
+            lf, lmask, laction, lreward = self._pending
+            self.replay.add(Transition(lf, lmask, laction, lreward, pf, pmask,
+                                       k=ctx.k))
+        action = np.zeros((MAX_COHORT,), np.float32)
+        # indices within the probe cohort that were selected
+        sel_local = {int(i) for i in self._last[2]}
+        for j in range(len(probe_ids)):
+            if j in sel_local:
+                action[j] = 1.0
+        self._pending = (pf, pmask, action, float(result.reward))
+        self._rounds_seen += 1
+        self.explore_eps *= self.explore_decay
+
+        if not self.online or len(self.replay) < max(2, self.train_batch // 2):
+            return
+        for _ in range(self.train_steps_per_round):
+            batch = batch_transitions(self.replay.sample(self.train_batch))
+            (self.q, self._opt_m, self._opt_v, self._opt_t, loss, aux
+             ) = self._train_step(self.q, self.q_target, self._opt_m,
+                                  self._opt_v, self._opt_t, batch)
+        self.metrics["loss"].append(float(loss))
+        self.metrics["l_rl"].append(float(aux["l_rl"]))
+        self.metrics["l_rank"].append(float(aux["l_rank"]))
+        if self._rounds_seen % self.target_period == 0:
+            self.q_target = soft_update(self.q_target, self.q, 1.0)
+
+
+def make_fedrank_variant(variant: str, qnet_params=None, **kw) -> FedRankPolicy:
+    """Ablations: 'full', 'no_il' (-I), 'no_rank' (-P), 'no_il_no_rank' (-IP)."""
+    if variant == "full":
+        return FedRankPolicy(qnet_params, name="fedrank", **kw)
+    if variant == "no_il":
+        return FedRankPolicy(None, name="fedrank-I", **kw)
+    if variant == "no_rank":
+        return FedRankPolicy(qnet_params, use_rank_loss=False,
+                             name="fedrank-P", **kw)
+    if variant == "no_il_no_rank":
+        return FedRankPolicy(None, use_rank_loss=False, name="fedrank-IP", **kw)
+    raise ValueError(variant)

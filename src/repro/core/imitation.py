@@ -1,0 +1,168 @@
+"""Offline pre-training with imitation learning (paper Alg. 1).
+
+Behavioral cloning against the analytical experts: run each expert policy in
+the FL simulator, record the visited cohort states B and the expert's utility
+scores, then train the Q-net so its ranking matches the expert's via the
+pairwise loss (L_theta(s, pi*) = RankNet BCE against the expert ordering).
+
+Using MULTIPLE diverse experts (oort + harmony + fedmarl) is the paper's
+Fig. 4 finding — the demonstrations are pooled.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import experts as experts_lib
+from repro.core.baselines import ExpertPolicy
+from repro.core.features import featurize
+from repro.core.qnet import apply_qnet, init_qnet
+from repro.core.ranking import pairwise_bce_hard, ranking_accuracy, topk_overlap
+
+
+@dataclass
+class Demonstration:
+    states: np.ndarray          # (M, 6) raw probe states
+    scores: np.ndarray          # (M,) expert utility
+    expert: str
+
+
+class _RecordingExpert(ExpertPolicy):
+    """ExpertPolicy that records (states, scores) demonstrations."""
+
+    def __init__(self, expert_name: str, store: List[Demonstration], l_ep: int = 5):
+        super().__init__(expert_name, l_ep=l_ep)
+        self.store = store
+
+    def select(self, ctx, probe_ids, probe_states):
+        util = experts_lib.expert_scores(self.expert_name, probe_states,
+                                         l_ep=self.l_ep)
+        self.store.append(Demonstration(probe_states.copy(), util.copy(),
+                                        self.expert_name))
+        return probe_ids[np.argsort(-util)[:ctx.k]]
+
+
+def collect_demonstrations(
+    make_server: Callable[[], "object"],
+    expert_names: Sequence[str] = ("oort", "harmony", "fedmarl"),
+    rounds_per_expert: int = 15,
+) -> List[Demonstration]:
+    """Run each expert in a fresh FL environment, recording visited states
+    (Alg. 1 lines 3-5)."""
+    demos: List[Demonstration] = []
+    for name in expert_names:
+        server = make_server()
+        policy = _RecordingExpert(name, demos)
+        server.run(policy, rounds=rounds_per_expert)
+    return demos
+
+
+def augment_demonstrations(demos: List[Demonstration], n_synthetic: int = 200,
+                           cohort: int = 30, seed: int = 0,
+                           expert_names: Sequence[str] = ("oort", "harmony", "fedmarl"),
+                           ) -> List[Demonstration]:
+    """Cheap expert queries on synthetic states — IL's "probe the expert
+    anywhere" advantage (§2.2): broadens coverage beyond visited states."""
+    rng = np.random.default_rng(seed)
+    out = list(demos)
+    for _ in range(n_synthetic):
+        states = np.stack([
+            rng.lognormal(3.0, 1.2, cohort),        # t_comp
+            rng.lognormal(2.0, 1.0, cohort),        # t_comm
+            rng.lognormal(1.0, 1.2, cohort),        # e_comp
+            rng.lognormal(0.0, 1.0, cohort),        # e_comm
+            rng.uniform(0.05, 3.0, cohort),         # loss
+            rng.lognormal(5.0, 0.8, cohort),        # data size
+        ], axis=1)
+        name = expert_names[int(rng.integers(len(expert_names)))]
+        scores = experts_lib.expert_scores(name, states, l_ep=5)
+        out.append(Demonstration(states, scores, name))
+    return out
+
+
+def pretrain_qnet(
+    demos: List[Demonstration],
+    *,
+    seed: int = 0,
+    steps: int = 2000,
+    batch: int = 16,
+    lr: float = 1e-3,
+    qnet_params=None,
+    objective: str = "pairwise",   # "pairwise" (paper) | "pointwise" ablation
+) -> Tuple[Dict, Dict[str, list]]:
+    """Behavioral cloning. ``objective="pairwise"`` is the paper's RankNet
+    BCE over expert orderings; ``"pointwise"`` regresses the z-scored expert
+    utility with MSE (the Fig. 5d ablation axis)."""
+    key = jax.random.PRNGKey(seed)
+    q = qnet_params if qnet_params is not None else init_qnet(key)
+    rng = np.random.default_rng(seed + 1)
+
+    # pre-featurize cohorts, pad to common M
+    max_m = max(len(d.states) for d in demos)
+    feats = np.zeros((len(demos), max_m, 6), np.float32)
+    tgts = np.zeros((len(demos), max_m), np.float32)
+    raw_tgts = np.zeros((len(demos), max_m), np.float32)
+    masks = np.zeros((len(demos), max_m), np.float32)
+    all_scores = np.concatenate([d.scores for d in demos])
+    raw_scale = float(np.abs(all_scores).mean()) + 1e-9
+    for i, d in enumerate(demos):
+        m = len(d.states)
+        feats[i, :m] = featurize(d.states)
+        s = d.scores
+        tgts[i, :m] = (s - s.mean()) / (s.std() + 1e-9)
+        # raw "absolute artificial score" (global scale only — what the
+        # paper's pointwise baselines regress)
+        raw_tgts[i, :m] = s / raw_scale
+        masks[i, :m] = 1.0
+    if objective == "pointwise_raw":
+        train_tgts = raw_tgts
+    else:
+        train_tgts = tgts
+
+    def loss_fn(q, f, t, m):
+        def per(f1, t1, m1):
+            scores = apply_qnet(q, f1)
+            if objective.startswith("pointwise"):
+                return jnp.sum(jnp.square(scores - t1) * m1) / jnp.maximum(
+                    jnp.sum(m1), 1.0)
+            return pairwise_bce_hard(scores, t1, m1)
+        return jax.vmap(per)(f, t, m).mean()
+
+    grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+
+    @jax.jit
+    def eval_metrics(q, f, t, m):
+        def per(f1, t1, m1):
+            scores = apply_qnet(q, f1)
+            return (ranking_accuracy(scores, t1, m1),
+                    topk_overlap(scores, t1, 10, m1))
+        ra, tk = jax.vmap(per)(f, t, m)
+        return ra.mean(), tk.mean()
+
+    # Adam state
+    opt_m = jax.tree.map(jnp.zeros_like, q)
+    opt_v = jax.tree.map(jnp.zeros_like, q)
+    hist = {"loss": [], "rank_acc": [], "top10_overlap": []}
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    for step in range(steps):
+        idx = rng.choice(len(demos), size=min(batch, len(demos)), replace=False)
+        l, g = grad_fn(q, jnp.asarray(feats[idx]), jnp.asarray(train_tgts[idx]),
+                       jnp.asarray(masks[idx]))
+        t = step + 1
+        opt_m = jax.tree.map(lambda m_, g_: b1 * m_ + (1 - b1) * g_, opt_m, g)
+        opt_v = jax.tree.map(lambda v_, g_: b2 * v_ + (1 - b2) * g_ * g_, opt_v, g)
+        q = jax.tree.map(
+            lambda p, m_, v_: p - lr * (m_ / (1 - b1 ** t)) /
+                              (jnp.sqrt(v_ / (1 - b2 ** t)) + eps),
+            q, opt_m, opt_v)
+        if step % 100 == 0 or step == steps - 1:
+            ra, tk = eval_metrics(q, jnp.asarray(feats), jnp.asarray(tgts),
+                                  jnp.asarray(masks))
+            hist["loss"].append(float(l))
+            hist["rank_acc"].append(float(ra))
+            hist["top10_overlap"].append(float(tk))
+    return q, hist

@@ -1,0 +1,42 @@
+"""The per-device Q-network: a three-layer MLP (paper §3.2) scoring each
+candidate device from its cohort-normalized state features.
+
+VDN decomposition (Sunehag et al., 2017): the cohort value is the SUM of
+per-device Q-values of the taken actions, so the net is applied device-wise
+and shared across devices.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.features import FEATURE_DIM
+from repro.models.layers import dense_init
+
+Params = Dict[str, Any]
+
+
+def init_qnet(key, in_dim: int = FEATURE_DIM, hidden: int = 64) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, in_dim, hidden, jnp.float32),
+        "b1": jnp.zeros((hidden,), jnp.float32),
+        "w2": dense_init(k2, hidden, hidden, jnp.float32),
+        "b2": jnp.zeros((hidden,), jnp.float32),
+        "w3": dense_init(k3, hidden, 1, jnp.float32),
+        "b3": jnp.zeros((1,), jnp.float32),
+    }
+
+
+def apply_qnet(p: Params, feats: jnp.ndarray) -> jnp.ndarray:
+    """feats: (..., F) -> scores (...,)."""
+    h = jax.nn.relu(feats @ p["w1"] + p["b1"])
+    h = jax.nn.relu(h @ p["w2"] + p["b2"])
+    return (h @ p["w3"] + p["b3"])[..., 0]
+
+
+def soft_update(target: Params, online: Params, tau: float = 1.0) -> Params:
+    """Periodic (tau=1) or Polyak (tau<1) target-network update."""
+    return jax.tree.map(lambda t, o: (1 - tau) * t + tau * o, target, online)

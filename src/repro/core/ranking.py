@@ -1,0 +1,72 @@
+"""Pairwise (RankNet) ranking losses — the paper's §3.4 contribution.
+
+Device selection only depends on the *order* of Q-values, so the Q-net is
+trained to preserve pairwise orders:
+
+    P_ij    = sigma(Q_i - Q_j)               (Eq. 3, predicted)
+    Pbar_ij = sigma(Qbar_i - Qbar_j)         (Eq. 3, target-net / expert)
+    L_Rank  = -sum_ij [ Pbar log P + (1 - Pbar) log(1 - P) ]   (Eq. 4)
+
+``pairwise_bce`` takes *soft* target probabilities (online RL: from the
+target network); ``pairwise_bce_hard`` takes a target score vector and uses
+hard 0/1 (ties 0.5) comparisons (imitation: expert utilities).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _pair_logits(scores: jnp.ndarray) -> jnp.ndarray:
+    """(M,) -> (M, M) matrix of score_i - score_j."""
+    return scores[:, None] - scores[None, :]
+
+
+def _pair_mask(mask: jnp.ndarray) -> jnp.ndarray:
+    m = mask.astype(jnp.float32)
+    pm = m[:, None] * m[None, :]
+    return pm * (1.0 - jnp.eye(m.shape[0]))
+
+
+def pairwise_bce(scores: jnp.ndarray, target_probs: jnp.ndarray,
+                 mask: jnp.ndarray) -> jnp.ndarray:
+    """scores (M,), target_probs (M,M) in [0,1], mask (M,) -> mean pair BCE."""
+    logits = _pair_logits(scores)
+    pm = _pair_mask(mask)
+    # numerically-stable BCE with logits
+    bce = jnp.maximum(logits, 0.0) - logits * target_probs + jnp.log1p(
+        jnp.exp(-jnp.abs(logits)))
+    return jnp.sum(bce * pm) / jnp.maximum(jnp.sum(pm), 1.0)
+
+
+def pairwise_bce_hard(scores: jnp.ndarray, target_scores: jnp.ndarray,
+                      mask: jnp.ndarray) -> jnp.ndarray:
+    """Hard pairwise targets from a reference score vector (expert utility)."""
+    diff = target_scores[:, None] - target_scores[None, :]
+    tgt = jnp.where(diff > 0, 1.0, jnp.where(diff < 0, 0.0, 0.5))
+    return pairwise_bce(scores, tgt, mask)
+
+
+def pairwise_soft_targets(target_scores: jnp.ndarray) -> jnp.ndarray:
+    """Pbar_ij = sigma(Qbar_i - Qbar_j) (Eq. 3, target network side)."""
+    return jax.nn.sigmoid(_pair_logits(target_scores))
+
+
+def ranking_accuracy(scores: jnp.ndarray, target_scores: jnp.ndarray,
+                     mask: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of correctly-ordered (non-tied) pairs — an eval metric."""
+    ps = _pair_logits(scores)
+    pt = _pair_logits(target_scores)
+    pm = _pair_mask(mask) * (jnp.abs(pt) > 1e-12)
+    hit = (jnp.sign(ps) == jnp.sign(pt)).astype(jnp.float32)
+    return jnp.sum(hit * pm) / jnp.maximum(jnp.sum(pm), 1.0)
+
+
+def topk_overlap(scores: jnp.ndarray, target_scores: jnp.ndarray, k: int,
+                 mask: jnp.ndarray) -> jnp.ndarray:
+    """|topK(scores) ∩ topK(target)| / K on valid entries."""
+    neg = -1e30 * (1.0 - mask.astype(jnp.float32))
+    _, a = jax.lax.top_k(scores + neg, k)
+    _, b = jax.lax.top_k(target_scores + neg, k)
+    inter = (a[:, None] == b[None, :]).sum()
+    return inter.astype(jnp.float32) / k

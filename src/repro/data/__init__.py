@@ -1,0 +1,17 @@
+from repro.data.synthetic import (
+    SyntheticClassificationDataset,
+    make_classification_data,
+    make_lm_stream,
+)
+from repro.data.partition import dirichlet_partition, iid_partition
+from repro.data.loader import FederatedData, batch_iterator
+
+__all__ = [
+    "SyntheticClassificationDataset",
+    "make_classification_data",
+    "make_lm_stream",
+    "dirichlet_partition",
+    "iid_partition",
+    "FederatedData",
+    "batch_iterator",
+]

@@ -1,0 +1,13 @@
+from repro.fl.simulation import DevicePool, DeviceProfile, RoundSystemState
+from repro.fl.tasks import MLPTask, LMTask, ClientTask
+from repro.fl.client import local_train, probing_epoch
+from repro.fl.aggregation import fedavg, weighted_delta_aggregate
+from repro.fl.server import FLServer, FLConfig, RoundResult
+
+__all__ = [
+    "DevicePool", "DeviceProfile", "RoundSystemState",
+    "MLPTask", "LMTask", "ClientTask",
+    "local_train", "probing_epoch",
+    "fedavg", "weighted_delta_aggregate",
+    "FLServer", "FLConfig", "RoundResult",
+]

@@ -1,0 +1,38 @@
+"""Server-side aggregation rules."""
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+def fedavg(client_params: Sequence[Params], weights: Sequence[float]) -> Params:
+    """Data-size-weighted parameter average (McMahan et al., 2017)."""
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+
+    def combine(*leaves):
+        acc = leaves[0].astype(jnp.float32) * w[0]
+        for wi, leaf in zip(w[1:], leaves[1:]):
+            acc = acc + leaf.astype(jnp.float32) * wi
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(combine, *client_params)
+
+
+def weighted_delta_aggregate(global_params: Params,
+                             client_params: Sequence[Params],
+                             weights: Sequence[float],
+                             server_lr: float = 1.0) -> Params:
+    """FedOpt-style: apply the weighted mean of client deltas with a server
+    step size (reduces to fedavg at server_lr=1)."""
+    avg = fedavg(client_params, weights)
+    return jax.tree.map(
+        lambda g, a: (g.astype(jnp.float32)
+                      + server_lr * (a.astype(jnp.float32) - g.astype(jnp.float32))
+                      ).astype(g.dtype),
+        global_params, avg)

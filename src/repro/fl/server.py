@@ -1,0 +1,276 @@
+"""FL server: round orchestration with probing / early-exit (paper §3.1).
+
+Round anatomy (probing policy, e.g. FedRank):
+  1. policy picks a probe set; every probe device runs ONE local epoch
+     ("probing"), reporting its 6-dim state
+     s_i = (T_comp, T_comm, E_comp, E_comm, L_i, D_i);
+  2. the policy ranks probe devices and keeps top-K — the rest EXIT EARLY
+     (their single epoch is charged via T_prob / E_prob);
+  3. the K survivors run the remaining l_ep - 1 epochs and upload updates;
+  4. FedAvg aggregation, global eval, reward (paper Eq. 1), policy feedback.
+
+Non-probing baselines (random / AFL / TiFL / Oort / Favor): selection happens
+before any local work and the selected devices run all l_ep epochs (vanilla
+cost model).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Protocol, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.loader import FederatedData
+from repro.fl.aggregation import fedavg
+from repro.fl.client import local_train, probing_epoch
+from repro.fl.simulation import (
+    DevicePool,
+    RoundSystemState,
+    round_energy,
+    round_latency,
+    vanilla_round_energy,
+    vanilla_round_latency,
+)
+
+Params = Any
+
+
+@dataclass
+class FLConfig:
+    n_devices: int = 100
+    k_select: int = 10
+    rounds: int = 50
+    l_ep: int = 5                 # local epochs per round (paper setting)
+    local_batch: int = 32
+    lr: float = 0.05
+    alpha: float = 2.0            # latency penalty exponent (paper: 2)
+    beta: float = 2.0             # energy penalty exponent (paper: 2)
+    t_budget: Optional[float] = None   # developer-preferred round duration T
+    e_budget: Optional[float] = None   # developer-preferred round energy E
+    prox_mu: float = 0.0          # >0 => FedProx local objective
+    probe_factor: float = 3.0     # probing candidate pool = probe_factor * K
+    failure_rate: float = 0.0     # per-round prob a selected device drops out
+    #                               (uploads nothing; its time/energy is sunk)
+    seed: int = 0
+
+
+@dataclass
+class RoundContext:
+    """Everything a selection policy may observe at the start of a round."""
+
+    round: int
+    n: int
+    k: int
+    sys: RoundSystemState            # true per-round system state (probing reveals)
+    est_t_round: np.ndarray          # (N,) static estimate of full-round latency
+    est_e_round: np.ndarray          # (N,) static estimate of full-round energy
+    data_sizes: np.ndarray           # (N,)
+    last_loss: np.ndarray            # (N,) most recent observed training loss
+    loss_age: np.ndarray             # (N,) rounds since last_loss was observed
+    selection_count: np.ndarray = None  # (N,) times each device was selected
+    rng: np.random.Generator = field(repr=False, default=None)
+
+    def probe_states(self, ids: np.ndarray, probe_losses: np.ndarray) -> np.ndarray:
+        """The paper's 6-dim state matrix (len(ids), 6) for probed devices."""
+        s = self.sys
+        return np.stack([
+            s.t_comp[ids], s.t_comm[ids], s.e_comp[ids], s.e_comm[ids],
+            probe_losses, self.data_sizes[ids].astype(np.float64),
+        ], axis=1)
+
+
+class SelectionPolicy(Protocol):
+    name: str
+    needs_probing: bool
+
+    def probe_set(self, ctx: RoundContext) -> np.ndarray: ...
+
+    def select(self, ctx: RoundContext,
+               probe_ids: Optional[np.ndarray],
+               probe_states: Optional[np.ndarray]) -> np.ndarray: ...
+
+    def observe(self, ctx: RoundContext, result: "RoundResult",
+                probe_ids: Optional[np.ndarray],
+                probe_states: Optional[np.ndarray]) -> None: ...
+
+
+@dataclass
+class RoundResult:
+    round: int
+    selected: np.ndarray
+    probe_set: np.ndarray
+    acc: float
+    test_loss: float
+    r_t: float                    # round latency (s)
+    r_e: float                    # round energy (J)
+    d_acc: float
+    reward: float
+    cum_time: float
+    cum_energy: float
+    failed: np.ndarray = None     # selected devices that dropped mid-round
+
+
+def paper_reward(d_acc: float, r_t: float, r_e: float, t_budget: float,
+                 e_budget: float, alpha: float, beta: float) -> float:
+    """Eq. (1): R = dAcc * (T/R_T)^{1(T<R_T) a} * (E/R_E)^{1(E<R_E) b}."""
+    r = d_acc
+    if t_budget < r_t:
+        r *= (t_budget / r_t) ** alpha
+    if e_budget < r_e:
+        r *= (e_budget / r_e) ** beta
+    return float(r)
+
+
+class FLServer:
+    def __init__(self, cfg: FLConfig, task, data: FederatedData,
+                 pool: Optional[DevicePool] = None):
+        self.cfg = cfg
+        self.task = task
+        self.data = data
+        self.pool = pool or DevicePool(cfg.n_devices, seed=cfg.seed)
+        self.rng = np.random.default_rng(cfg.seed + 17)
+        key = jax.random.PRNGKey(cfg.seed)
+        self.global_params: Params = task.init(key)
+        self.data_sizes = np.array([data.client_size(i) for i in range(cfg.n_devices)])
+        self.last_loss = np.full(cfg.n_devices, 3.0)
+        self.loss_age = np.zeros(cfg.n_devices)
+        self.selection_count = np.zeros(cfg.n_devices)
+        self.history: List[RoundResult] = []
+        self._eval_fn = jax.jit(task.accuracy)
+        self._loss_fn = jax.jit(task.loss)
+        self._cum_time = 0.0
+        self._cum_energy = 0.0
+        self._last_acc = self._evaluate()[0]
+        # calibrate budgets from the static profile if not given: the median
+        # device's full-round cost (a "reasonable phone" finishing on time)
+        est_t, est_e = self._static_round_estimates()
+        self.t_budget = cfg.t_budget or float(np.median(est_t))
+        self.e_budget = cfg.e_budget or float(np.median(est_e)) * cfg.k_select
+
+    # ------------------------------------------------------------------
+    def _flops_per_epoch(self) -> np.ndarray:
+        return self.task.flops_per_sample() * self.data_sizes
+
+    def _static_round_estimates(self):
+        from repro.fl.simulation import static_estimates
+
+        return static_estimates(self.pool, self._flops_per_epoch(),
+                                self.task.param_bytes(), self.cfg.l_ep)
+
+    def _evaluate(self):
+        te = self.data.test
+        bs = 512
+        accs, losses, n = [], [], 0
+        for i in range(0, len(te.y), bs):
+            b = {"x": jnp.asarray(te.x[i:i + bs]), "y": jnp.asarray(te.y[i:i + bs])}
+            accs.append(float(self._eval_fn(self.global_params, b)) * len(b["y"]))
+            losses.append(float(self._loss_fn(self.global_params, b)) * len(b["y"]))
+            n += len(b["y"])
+        return sum(accs) / n, sum(losses) / n
+
+    def _ctx(self) -> RoundContext:
+        sys = self.pool.system_state(self._flops_per_epoch(), self.task.param_bytes())
+        est_t, est_e = self._static_round_estimates()
+        return RoundContext(
+            round=len(self.history), n=self.cfg.n_devices, k=self.cfg.k_select,
+            sys=sys, est_t_round=est_t, est_e_round=est_e,
+            data_sizes=self.data_sizes, last_loss=self.last_loss.copy(),
+            loss_age=self.loss_age.copy(),
+            selection_count=self.selection_count.copy(), rng=self.rng)
+
+    # ------------------------------------------------------------------
+    def run_round(self, policy: SelectionPolicy) -> RoundResult:
+        cfg = self.cfg
+        self.pool.advance_round()
+        ctx = self._ctx()
+        self.loss_age += 1
+
+        probe_ids = probe_states = None
+        client_results: Dict[int, Params] = {}
+
+        if policy.needs_probing:
+            probe_ids = np.asarray(policy.probe_set(ctx))
+            probe_losses = np.zeros(len(probe_ids))
+            partial: Dict[int, Params] = {}
+            for j, i in enumerate(probe_ids):
+                idx = self.data.client_indices[i]
+                x, y = self.data.train.x[idx], self.data.train.y[idx]
+                p1, l1 = probing_epoch(self.task, self.global_params, x, y,
+                                       lr=cfg.lr, batch_size=cfg.local_batch,
+                                       prox_mu=cfg.prox_mu,
+                                       seed=cfg.seed + 1000 * ctx.round + int(i))
+                partial[int(i)] = p1
+                probe_losses[j] = l1
+                self.last_loss[i] = l1
+                self.loss_age[i] = 0
+            probe_states = ctx.probe_states(probe_ids, probe_losses)
+            selected = np.asarray(policy.select(ctx, probe_ids, probe_states))
+            # survivors complete the remaining epochs from their probed params
+            for i in selected:
+                idx = self.data.client_indices[i]
+                x, y = self.data.train.x[idx], self.data.train.y[idx]
+                p_fin, losses = local_train(
+                    self.task, partial[int(i)], x, y, epochs=cfg.l_ep - 1,
+                    lr=cfg.lr, batch_size=cfg.local_batch, prox_mu=cfg.prox_mu,
+                    seed=cfg.seed + 2000 * ctx.round + int(i))
+                client_results[int(i)] = p_fin
+                self.last_loss[i] = losses[-1] if len(losses) else self.last_loss[i]
+            r_t = round_latency(ctx.sys, probe_ids, selected, cfg.l_ep)
+            r_e = round_energy(ctx.sys, probe_ids, selected, cfg.l_ep)
+        else:
+            selected = np.asarray(policy.select(ctx, None, None))
+            for i in selected:
+                idx = self.data.client_indices[i]
+                x, y = self.data.train.x[idx], self.data.train.y[idx]
+                p_fin, losses = local_train(
+                    self.task, self.global_params, x, y, epochs=cfg.l_ep,
+                    lr=cfg.lr, batch_size=cfg.local_batch, prox_mu=cfg.prox_mu,
+                    seed=cfg.seed + 2000 * ctx.round + int(i))
+                client_results[int(i)] = p_fin
+                self.last_loss[i] = losses[0]
+                self.loss_age[i] = 0
+            r_t = vanilla_round_latency(ctx.sys, selected, cfg.l_ep)
+            r_e = vanilla_round_energy(ctx.sys, selected, cfg.l_ep)
+            probe_ids = np.asarray([], dtype=np.int64)
+
+        # failure injection: selected devices may drop before uploading —
+        # their compute/latency cost is sunk but they contribute no update
+        failed = np.asarray([], dtype=np.int64)
+        if cfg.failure_rate > 0 and client_results:
+            drop = self.rng.random(len(selected)) < cfg.failure_rate
+            failed = np.asarray(selected)[drop]
+            for i in failed:
+                client_results.pop(int(i), None)
+
+        if client_results:
+            weights = [self.data_sizes[i] for i in client_results]
+            self.global_params = fedavg(list(client_results.values()), weights)
+        self.selection_count[selected] += 1
+
+        acc, test_loss = self._evaluate()
+        d_acc = acc - self._last_acc
+        self._last_acc = acc
+        reward = paper_reward(d_acc, r_t, r_e, self.t_budget, self.e_budget,
+                              cfg.alpha, cfg.beta)
+        self._cum_time += r_t
+        self._cum_energy += r_e
+        result = RoundResult(
+            round=ctx.round, selected=selected, probe_set=probe_ids, acc=acc,
+            test_loss=test_loss, r_t=r_t, r_e=r_e, d_acc=d_acc, reward=reward,
+            cum_time=self._cum_time, cum_energy=self._cum_energy, failed=failed)
+        self.history.append(result)
+        policy.observe(ctx, result, probe_ids if policy.needs_probing else None,
+                       probe_states)
+        return result
+
+    def run(self, policy: SelectionPolicy, rounds: Optional[int] = None,
+            verbose: bool = False) -> List[RoundResult]:
+        for r in range(rounds or self.cfg.rounds):
+            res = self.run_round(policy)
+            if verbose:
+                print(f"[{policy.name}] round {res.round:3d} acc={res.acc:.4f} "
+                      f"R_T={res.r_t:8.1f}s R_E={res.r_e:9.1f}J reward={res.reward:+.5f}")
+        return self.history

@@ -1,0 +1,165 @@
+"""Heterogeneous mobile-device simulator.
+
+Replaces the paper's physical testbed (Monsoon power monitor + LiveLab user
+traces) with a parameterized model:
+
+* **Static heterogeneity** — devices are drawn from tiers (flagship / mid /
+  low-end) with per-device compute throughput (FLOP/s), network bandwidth
+  (B/s), and energy coefficients (J/FLOP, J/byte).  These spreads follow the
+  ~1-2 order-of-magnitude ranges reported for real phone fleets.
+* **Dynamic runtime variation** — a per-device 3-state Markov chain
+  (idle / light / heavy interference) modulates effective compute per round,
+  emulating concurrently-running apps (the paper integrates LiveLab traces
+  for the same purpose).
+
+Latency/energy of a round for device i:
+    T_comp,i = flops_per_epoch_i / (speed_i * load_i)       (per local epoch)
+    T_comm,i = model_bytes * 2 / bw_i
+    E_comp,i = flops_per_epoch_i * j_per_flop_i
+    E_comm,i = model_bytes * 2 * j_per_byte_i
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+
+@dataclass
+class DeviceProfile:
+    speed: float          # FLOP/s sustained
+    bandwidth: float      # bytes/s (symmetrized up+down)
+    j_per_flop: float
+    j_per_byte: float
+    tier: int
+
+
+@dataclass
+class RoundSystemState:
+    """Per-device system observables for one round (before selection)."""
+
+    t_comp: np.ndarray    # (N,) seconds per local epoch
+    t_comm: np.ndarray    # (N,) seconds for model down+up
+    e_comp: np.ndarray    # (N,) joules per local epoch
+    e_comm: np.ndarray    # (N,) joules for comms
+    load: np.ndarray      # (N,) current interference multiplier (<=1)
+
+
+_TIERS = [
+    # (effective training FLOP/s, bw B/s, J/FLOP, J/byte)
+    # Effective on-device training throughput (not peak silicon): a flagship
+    # phone sustains ~1 GFLOP/s of useful DNN training, low-end ~20x less;
+    # energy from ~4-6 W training draw and ~1-2 W radio.
+    (1.2e9, 12.5e6, 4.0e-9, 1.5e-7),     # flagship
+    (3.5e8, 5.0e6, 1.0e-8, 3.0e-7),      # mid-range
+    (6.0e7, 1.5e6, 2.5e-8, 6.0e-7),      # low-end
+]
+
+# fixed per-round protocol overhead (handshake, scheduling), seconds
+_COMM_OVERHEAD_S = 2.0
+
+# Markov chain over interference states {1.0, 0.55, 0.25}
+_LOAD_LEVELS = np.array([1.0, 0.55, 0.25])
+_LOAD_TRANS = np.array([
+    [0.80, 0.15, 0.05],
+    [0.30, 0.55, 0.15],
+    [0.15, 0.35, 0.50],
+])
+
+
+class DevicePool:
+    """N simulated devices with static + dynamic heterogeneity."""
+
+    def __init__(self, n_devices: int, seed: int = 0,
+                 tier_probs: Optional[List[float]] = None):
+        self.n = n_devices
+        self.rng = np.random.default_rng(seed)
+        tier_probs = tier_probs or [0.25, 0.5, 0.25]
+        self.devices: List[DeviceProfile] = []
+        for _ in range(n_devices):
+            t = int(self.rng.choice(len(_TIERS), p=tier_probs))
+            sp, bw, jf, jb = _TIERS[t]
+            jitter = lambda: float(self.rng.lognormal(0.0, 0.25))
+            self.devices.append(DeviceProfile(
+                speed=sp * jitter(), bandwidth=bw * jitter(),
+                j_per_flop=jf * jitter(), j_per_byte=jb * jitter(), tier=t))
+        self._load_state = self.rng.integers(0, 3, size=n_devices)
+        self.round_idx = 0
+
+    # ------------------------------------------------------------------
+    def advance_round(self) -> None:
+        """Step every device's interference Markov chain."""
+        u = self.rng.random(self.n)
+        cdf = np.cumsum(_LOAD_TRANS[self._load_state], axis=1)
+        self._load_state = (u[:, None] > cdf).sum(axis=1)
+        self.round_idx += 1
+
+    def loads(self) -> np.ndarray:
+        return _LOAD_LEVELS[self._load_state]
+
+    def system_state(self, flops_per_epoch: np.ndarray, model_bytes: float
+                     ) -> RoundSystemState:
+        """flops_per_epoch: (N,) — depends on each client's local data size."""
+        speed = np.array([d.speed for d in self.devices])
+        bw = np.array([d.bandwidth for d in self.devices])
+        jf = np.array([d.j_per_flop for d in self.devices])
+        jb = np.array([d.j_per_byte for d in self.devices])
+        load = self.loads()
+        t_comp = flops_per_epoch / (speed * load)
+        t_comm = 2.0 * model_bytes / bw + _COMM_OVERHEAD_S
+        e_comp = flops_per_epoch * jf
+        e_comm = 2.0 * model_bytes * jb
+        return RoundSystemState(t_comp, t_comm, e_comp, e_comm, load)
+
+
+def static_estimates(pool: "DevicePool", flops_per_epoch: np.ndarray,
+                     model_bytes: float, l_ep: int):
+    """Load-free (static-profile) per-device full-round latency/energy
+    estimates — what a scheduler knows *before* probing."""
+    speed = np.array([d.speed for d in pool.devices])
+    bw = np.array([d.bandwidth for d in pool.devices])
+    jf = np.array([d.j_per_flop for d in pool.devices])
+    jb = np.array([d.j_per_byte for d in pool.devices])
+    t = 2 * model_bytes / bw + _COMM_OVERHEAD_S + l_ep * flops_per_epoch / speed
+    e = 2 * model_bytes * jb + l_ep * flops_per_epoch * jf
+    return t, e
+
+
+def round_latency(state: RoundSystemState, probe_set: np.ndarray,
+                  selected: np.ndarray, l_ep: int) -> float:
+    """R_T per the paper: T_prob + max over selected of
+    (T_comm + T_comp * (l_ep - 1))."""
+    t_prob = float(state.t_comp[probe_set].max()) if len(probe_set) else 0.0
+    if len(selected) == 0:
+        return t_prob
+    rest = state.t_comm[selected] + state.t_comp[selected] * (l_ep - 1)
+    return t_prob + float(rest.max())
+
+
+def round_energy(state: RoundSystemState, probe_set: np.ndarray,
+                 selected: np.ndarray, l_ep: int) -> float:
+    """R_E per the paper: E_prob + sum over selected of
+    (E_comm + E_comp * (l_ep - 1))."""
+    e_prob = float(state.e_comp[probe_set].sum()) if len(probe_set) else 0.0
+    if len(selected) == 0:
+        return e_prob
+    rest = state.e_comm[selected] + state.e_comp[selected] * (l_ep - 1)
+    return e_prob + float(rest.sum())
+
+
+def vanilla_round_latency(state: RoundSystemState, selected: np.ndarray,
+                          l_ep: int) -> float:
+    """Non-probing baseline: every selected device runs all l_ep epochs."""
+    if len(selected) == 0:
+        return 0.0
+    tot = state.t_comm[selected] + state.t_comp[selected] * l_ep
+    return float(tot.max())
+
+
+def vanilla_round_energy(state: RoundSystemState, selected: np.ndarray,
+                         l_ep: int) -> float:
+    if len(selected) == 0:
+        return 0.0
+    tot = state.e_comm[selected] + state.e_comp[selected] * l_ep
+    return float(tot.sum())

@@ -1,0 +1,129 @@
+"""Client-side training tasks (the model each FL client trains locally).
+
+Two concrete tasks:
+
+* :class:`MLPTask` — classification MLP on the synthetic feature datasets;
+  plays the role of LeNet5/ResNet18 in the paper's testbed at CPU-feasible
+  scale.
+* :class:`LMTask`  — next-token LM over a reduced assigned-architecture
+  config, tying the FL substrate to the model zoo (any ``--arch`` can be the
+  global model).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+from repro.models.layers import dense_init, softmax_xent
+
+Params = Any
+
+
+class ClientTask(Protocol):
+    def init(self, key) -> Params: ...
+
+    def loss(self, params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray: ...
+
+    def accuracy(self, params: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray: ...
+
+    def flops_per_sample(self) -> float: ...
+
+    def param_bytes(self) -> float: ...
+
+
+# ---------------------------------------------------------------------------
+
+
+class MLPTask:
+    """2-hidden-layer MLP classifier."""
+
+    def __init__(self, dim: int = 32, hidden: int = 128, n_classes: int = 10):
+        self.dim, self.hidden, self.n_classes = dim, hidden, n_classes
+
+    def init(self, key) -> Params:
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "w1": dense_init(k1, self.dim, self.hidden, jnp.float32),
+            "b1": jnp.zeros((self.hidden,), jnp.float32),
+            "w2": dense_init(k2, self.hidden, self.hidden, jnp.float32),
+            "b2": jnp.zeros((self.hidden,), jnp.float32),
+            "w3": dense_init(k3, self.hidden, self.n_classes, jnp.float32),
+            "b3": jnp.zeros((self.n_classes,), jnp.float32),
+        }
+
+    def logits(self, p: Params, x: jnp.ndarray) -> jnp.ndarray:
+        h = jax.nn.relu(x @ p["w1"] + p["b1"])
+        h = jax.nn.relu(h @ p["w2"] + p["b2"])
+        return h @ p["w3"] + p["b3"]
+
+    def loss(self, p: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        lg = self.logits(p, batch["x"])
+        return softmax_xent(lg, batch["y"], batch.get("mask"))
+
+    def accuracy(self, p: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        lg = self.logits(p, batch["x"])
+        pred = jnp.argmax(lg, -1)
+        hit = (pred == batch["y"]).astype(jnp.float32)
+        mask = batch.get("mask")
+        if mask is None:
+            return hit.mean()
+        return jnp.sum(hit * mask) / jnp.maximum(mask.sum(), 1.0)
+
+    def flops_per_sample(self) -> float:
+        # fwd+bwd ~= 3x fwd; fwd = 2 * param MACs
+        p = self.dim * self.hidden + self.hidden ** 2 + self.hidden * self.n_classes
+        return 6.0 * p
+
+    def param_bytes(self) -> float:
+        p = (self.dim * self.hidden + self.hidden ** 2
+             + self.hidden * self.n_classes + 2 * self.hidden + self.n_classes)
+        return 4.0 * p
+
+
+# ---------------------------------------------------------------------------
+
+
+class LMTask:
+    """Next-token LM on a (reduced) assigned architecture."""
+
+    def __init__(self, cfg: ModelConfig, seq_len: int = 64):
+        self.cfg = cfg
+        self.seq_len = seq_len
+
+    def init(self, key) -> Params:
+        return T.init_params(key, self.cfg)
+
+    @staticmethod
+    def _seq_mask(mask, labels):
+        """Sample-level (B,) validity -> token-level (B, S) loss mask."""
+        if mask is None:
+            return None
+        return mask[:, None] * jnp.ones_like(labels, jnp.float32)
+
+    def loss(self, p: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        loss, _ = T.loss_fn(p, self.cfg, {
+            "tokens": batch["x"], "labels": batch["y"],
+            "loss_mask": self._seq_mask(batch.get("mask"), batch["y"]),
+            "frontend_embeds": batch.get("frontend_embeds"),
+        })
+        return loss
+
+    def accuracy(self, p: Params, batch: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        logits, _ = T.forward(p, self.cfg, batch["x"],
+                              batch.get("frontend_embeds"))
+        pred = jnp.argmax(logits, -1)
+        hit = (pred == batch["y"]).astype(jnp.float32)
+        mask = self._seq_mask(batch.get("mask"), batch["y"])
+        if mask is None:
+            return hit.mean()
+        return jnp.sum(hit * mask) / jnp.maximum(mask.sum(), 1.0)
+
+    def flops_per_sample(self) -> float:
+        return 6.0 * self.cfg.param_count() * self.seq_len
+
+    def param_bytes(self) -> float:
+        return 2.0 * self.cfg.param_count()

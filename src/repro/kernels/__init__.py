@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each subpackage follows the kernel.py (pl.pallas_call + BlockSpec) /
+ops.py (dispatching public op) / ref.py (pure-jnp oracle) convention and is
+validated in interpret mode on CPU (tests/test_kernels.py):
+
+    pairwise_rank    O(N^2) RankNet pair loss — the FedRank scheduler's hot
+                     spot at production candidate-pool sizes
+    flash_attention  GQA-folded blockwise attention w/ causal + sliding-window
+                     masking and block skipping
+    rwkv6            chunkwise-parallel WKV6 (data-dependent decay) with
+                     VMEM-resident (n, n) state
+    mamba            selective scan with VMEM-resident (inner, state) state
+                     (EXPERIMENTS.md §Perf pair A it4)
+"""

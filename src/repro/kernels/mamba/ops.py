@@ -1,0 +1,18 @@
+"""Public selective-scan op with kernel/oracle dispatch."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.mamba.kernel import selective_scan_pallas
+from repro.kernels.mamba.ref import selective_scan_ref
+
+
+def selective_scan(x, dt, Bm, Cm, A, h0, *, impl: str = "pallas",
+                   chunk: int = 64) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x/dt: (B,T,inner); Bm/Cm: (B,T,state); A: (inner,state);
+    h0: (B,inner,state) -> (y (B,T,inner), h_final)."""
+    if impl == "pallas":
+        return selective_scan_pallas(x, dt, Bm, Cm, A, h0, chunk=chunk)
+    return selective_scan_ref(x, dt, Bm, Cm, A, h0)

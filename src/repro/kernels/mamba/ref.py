@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the Mamba-1 selective scan.
+
+    h_t = exp(dt_t ⊙ A) h_{t-1} + (dt_t * x_t) B_t
+    y_t = C_t . h_t
+x/dt: (B, T, inner); Bm/Cm: (B, T, state); A: (inner, state); h0: (B, inner, state).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, Bm: jnp.ndarray,
+                       Cm: jnp.ndarray, A: jnp.ndarray, h0: jnp.ndarray
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    Bf = Bm.astype(jnp.float32)
+    Cf = Cm.astype(jnp.float32)
+    Af = A.astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[..., None] * Af)                   # (B, inner, state)
+        h = da * h + (dt_t * x_t)[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bis,bs->bi", h, c_t)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (xf, dtf, Bf, Cf))
+    h_fin, ys = jax.lax.scan(step, h0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_fin

@@ -1,0 +1,42 @@
+"""Public op: pairwise RankNet loss with kernel/oracle dispatch.
+
+``impl="pallas"`` runs the TPU kernel (interpret mode on CPU);
+``impl="xla"`` runs the pure-jnp oracle (used in the FL training loop on CPU
+and as the autodiff path — the Pallas kernel is forward-only and is wired
+with a custom VJP that falls back to the oracle gradient).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pairwise_rank.kernel import pairwise_rank_pallas
+from repro.kernels.pairwise_rank.ref import pairwise_rank_ref
+
+
+@jax.custom_vjp
+def pairwise_rank_loss(scores: jnp.ndarray, targets: jnp.ndarray,
+                       mask: jnp.ndarray) -> jnp.ndarray:
+    return pairwise_rank_pallas(scores, targets, mask)
+
+
+def _fwd(scores, targets, mask):
+    return pairwise_rank_loss(scores, targets, mask), (scores, targets, mask)
+
+
+def _bwd(res, g):
+    scores, targets, mask = res
+    # oracle gradient (identical math, XLA autodiff)
+    grads = jax.grad(pairwise_rank_ref, argnums=0)(scores, targets, mask)
+    return (g * grads, None, None)
+
+
+pairwise_rank_loss.defvjp(_fwd, _bwd)
+
+
+def pairwise_rank(scores, targets, mask, impl: str = "xla"):
+    if impl == "pallas":
+        return pairwise_rank_loss(scores, targets, mask)
+    return pairwise_rank_ref(scores, targets, mask)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the pairwise RankNet loss over a candidate cohort.
+
+Loss (paper Eq. 3-4) over all ordered pairs i != j of valid devices:
+    P_ij    = sigma(s_i - s_j)
+    Pbar_ij = sigma(t_i - t_j)
+    L       = mean_ij BCE(P_ij ; Pbar_ij)
+
+Returns (sum_of_pair_bce, n_pairs) so callers can combine partial results.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_rank_ref(scores: jnp.ndarray, targets: jnp.ndarray,
+                      mask: jnp.ndarray) -> jnp.ndarray:
+    """scores/targets/mask: (N,) -> scalar mean pairwise BCE (fp32)."""
+    s = scores.astype(jnp.float32)
+    t = targets.astype(jnp.float32)
+    m = mask.astype(jnp.float32)
+    logits = s[:, None] - s[None, :]
+    tgt = jax.nn.sigmoid(t[:, None] - t[None, :])
+    pm = m[:, None] * m[None, :] * (1.0 - jnp.eye(s.shape[0], dtype=jnp.float32))
+    bce = jnp.maximum(logits, 0.0) - logits * tgt + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    return jnp.sum(bce * pm) / jnp.maximum(jnp.sum(pm), 1.0)

@@ -1,0 +1,18 @@
+"""Public WKV6 op with kernel/oracle dispatch."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.kernels.rwkv6.kernel import wkv6_pallas
+from repro.kernels.rwkv6.ref import wkv6_ref
+
+
+def wkv6(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, logw: jnp.ndarray,
+         u: jnp.ndarray, s0: jnp.ndarray, *, impl: str = "pallas",
+         chunk: int = 64) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r/k/v/logw: (BH, T, n); u: (BH, n); s0: (BH, n, n)."""
+    if impl == "pallas":
+        return wkv6_pallas(r, k, v, logw, u, s0, chunk=chunk)
+    return wkv6_ref(r, k, v, logw, u, s0)

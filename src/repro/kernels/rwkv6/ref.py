@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the RWKV6 (Finch) WKV recurrence.
+
+Per head of width n, with data-dependent decay w_t = exp(logw_t) in (0,1):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+Layout: (BH, T, n) per-tensor, state (BH, n, n).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+             logw: jnp.ndarray, u: jnp.ndarray, s0: jnp.ndarray
+             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """r/k/v/logw: (BH, T, n); u: (BH, n); s0: (BH, n, n) ->
+    (y (BH, T, n), s_final)."""
+    rf = r.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    wf = jnp.exp(logw.astype(jnp.float32))
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                       # (BH, n)
+        kv = k_t[..., :, None] * v_t[..., None, :]     # (BH, n, n)
+        y = jnp.einsum("bi,bij->bj", r_t, S + u[..., :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (rf, kf, vf, wf))
+    s_fin, ys = jax.lax.scan(step, s0.astype(jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), s_fin

@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: prove every (architecture x input shape x mesh)
+# combination lowers, SPMD-partitions and compiles on the production mesh.
+#
+# The FIRST TWO LINES above must run before any jax import — jax locks the
+# device count at first init.  Do not set the flag globally (smoke tests and
+# benchmarks must see 1 device).
+#
+# Usage:
+#     python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+#     python -m repro.launch.dryrun --all --out results/dryrun.json
+#     python -m repro.launch.dryrun --all --multi-pod
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_model_config, get_shape, list_archs
+from repro.launch import steps as steps_lib
+from repro.launch.hlo_cost import analyze_hlo_text
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.launch.sharding import (
+    build_rules,
+    decode_state_specs,
+    named,
+    param_specs,
+)
+from repro.models.sharding import use_logical_rules
+
+
+def skip_reason(cfg, shape) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.supports_long_context():
+        return ("full quadratic attention at 524k context: skipped per "
+                "assignment rules (sub-quadratic archs only)")
+    return None
+
+
+def _batch_sharding(cfg, shape, mesh, rules):
+    ba = rules["batch"]
+    specs: Dict[str, P] = {
+        "tokens": P(ba, None),
+        "labels": P(ba, None),
+    }
+    if cfg.frontend is not None:
+        specs["frontend_embeds"] = P(ba, None, None)
+    return specs
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            impl: str = "blocked", donate: bool = True,
+            moe_dispatch: Optional[str] = None,
+            seq_shard: bool = False,
+            fsdp_on_output: bool = False,
+            weights_tp_only: bool = False,
+            extra_rules: Optional[Dict[str, Any]] = None,
+            cfg_overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    import dataclasses
+
+    cfg = get_model_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    ax = mesh_axis_sizes(mesh)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    if cfg.moe is not None:
+        # align MoE dispatch groups with the (pod x) data axis
+        groups = ax.get("data", 1) * ax.get("pod", 1)
+        moe = dataclasses.replace(cfg.moe, n_groups=groups,
+                                  **({"dispatch": moe_dispatch} if moe_dispatch else {}))
+        cfg = dataclasses.replace(cfg, moe=moe)
+    n_chips = int(mesh.devices.size)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": n_chips, "mode": shape.mode,
+    }
+    sk = skip_reason(cfg, shape)
+    if sk:
+        rec["status"] = "skipped"
+        rec["reason"] = sk
+        return rec
+
+    rules = build_rules(cfg, mesh, shape, seq_shard=seq_shard)
+    if extra_rules:
+        rules.update(extra_rules)
+    t0 = time.time()
+    try:
+        if shape.mode == "train":
+            optimizer = steps_lib.make_optimizer()
+            step = steps_lib.make_train_step(cfg, optimizer, impl=impl)
+            ps = steps_lib.params_struct(cfg)
+            os_ = steps_lib.opt_struct(cfg, optimizer)
+            pmode = "decode" if weights_tp_only else "train"
+            pspec = param_specs(cfg, ps, mesh, pmode,
+                                fsdp_on_output=fsdp_on_output)
+            ospec = {"mu": pspec, "nu": pspec, "step": P()}
+            bspec = _batch_sharding(cfg, shape, mesh, rules)
+            metrics_spec = {"loss": P(), "xent": P(), "aux": P()}
+            in_sh = (named(mesh, pspec), named(mesh, ospec), named(mesh, bspec))
+            out_sh = (named(mesh, pspec), named(mesh, ospec),
+                      named(mesh, metrics_spec))
+            args = (ps, os_, steps_lib.batch_specs(cfg, shape))
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=(0, 1) if donate else ())
+        elif shape.mode == "prefill":
+            step = steps_lib.make_prefill_step(cfg, shape, impl=impl)
+            ps = steps_lib.params_struct(cfg)
+            pspec = param_specs(cfg, ps, mesh, "decode")
+            bspec = _batch_sharding(cfg, shape, mesh, rules)
+            bspec.pop("labels")
+            state_struct = steps_lib.decode_state_struct(cfg, shape)
+            sspec = decode_state_specs(cfg, state_struct, mesh, shape)
+            logits_spec = P(rules["batch"], rules["vocab"])
+            in_sh = (named(mesh, pspec), named(mesh, bspec))
+            out_sh = (named(mesh, logits_spec), named(mesh, sspec))
+            inputs = steps_lib.input_specs(cfg, shape)
+            args = (ps, inputs["batch"])
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        else:  # decode
+            step = steps_lib.make_serve_step(cfg)
+            ps = steps_lib.params_struct(cfg)
+            pspec = param_specs(cfg, ps, mesh, "decode")
+            inputs = steps_lib.input_specs(cfg, shape)
+            sspec = decode_state_specs(cfg, inputs["state"], mesh, shape)
+            tok_spec = P(rules["batch"])
+            logits_spec = P(rules["batch"], rules["vocab"])
+            in_sh = (named(mesh, pspec), named(mesh, sspec),
+                     named(mesh, tok_spec))
+            out_sh = (named(mesh, logits_spec), named(mesh, sspec))
+            args = (ps, inputs["state"], inputs["token"])
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                             donate_argnums=(1,) if donate else ())
+
+        with mesh:
+            with use_logical_rules(mesh, rules):
+                lowered = jitted.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 1)
+
+        # ---- memory analysis ----
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes",
+                          "alias_size_in_bytes"):
+                    v = getattr(ma, k, None)
+                    if v is not None:
+                        rec.setdefault("memory", {})[k] = int(v)
+        except Exception as e:  # pragma: no cover
+            rec["memory_error"] = str(e)
+
+        # ---- XLA cost analysis (body-once; kept for cross-reference) ----
+        try:
+            ca = compiled.cost_analysis()
+            if ca:
+                rec["xla_cost"] = {k: float(ca[k]) for k in
+                                   ("flops", "bytes accessed") if k in ca}
+        except Exception as e:  # pragma: no cover
+            rec["xla_cost_error"] = str(e)
+
+        # ---- trip-count-corrected HLO analysis (per-device) ----
+        cost = analyze_hlo_text(compiled.as_text())
+        rec["hlo"] = {
+            "flops_per_device": cost.flops,
+            "bytes_per_device": cost.bytes,
+            "convert_bytes_per_device": cost.convert_bytes,
+            "collective_bytes": {k: v for k, v in sorted(cost.coll_bytes.items())},
+            "collective_wire_bytes": cost.coll_wire,
+            "unknown_trip_whiles": cost.unknown_trip_whiles,
+        }
+        rec["status"] = "ok"
+    except Exception as e:
+        rec["status"] = "error"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--impl", default="blocked")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    runs = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        combos = [(a, s.name) for a in list_archs() for s in INPUT_SHAPES]
+    else:
+        combos = [(args.arch, args.shape)]
+    for mp in meshes:
+        for arch, shape in combos:
+            rec = run_one(arch, shape, multi_pod=mp, impl=args.impl)
+            status = rec["status"]
+            extra = ""
+            if status == "ok":
+                extra = (f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                         f"flops/dev={rec['hlo']['flops_per_device']:.3e} "
+                         f"coll={rec['hlo']['collective_wire_bytes']:.3e}B")
+            elif status == "error":
+                extra = rec["error"]
+            print(f"[{rec['mesh']}] {arch:26s} {shape:12s} {status:8s} {extra}",
+                  flush=True)
+            runs.append(rec)
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(runs, f, indent=1)
+        print(f"wrote {args.out}")
+    n_err = sum(r["status"] == "error" for r in runs)
+    if n_err:
+        raise SystemExit(f"{n_err} dry-run failures")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,366 @@
+"""HLO-text cost analyzer for the roofline report.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis counts a ``while``
+body ONCE, but our models scan over layers (and attention scans over chunks),
+so its FLOPs are wrong by ~n_layers x.  The compiled HLO text annotates every
+while with ``backend_config={"known_trip_count":{"n":...}}``, so this module
+walks the call graph (ENTRY -> fusions/whiles/calls), multiplies loop bodies
+by their trip counts, and attributes:
+
+* **flops**   — 2*M*N*K for dots (from operand shapes + contracting dims),
+                output-element counts for elementwise/reduce ops;
+* **bytes**   — HBM traffic proxy: operand+result bytes at fusion/op
+                boundaries (intra-fusion ops are register/VMEM traffic);
+* **collective bytes** — per-kind wire bytes using the standard ring cost
+                model (all-reduce 2(g-1)/g, all-gather/reduce-scatter
+                (g-1)/g, all-to-all (g-1)/g, collective-permute 1x).
+
+The compiled module is the per-device (post-SPMD-partitioning) program, so
+every number is already per-chip.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 0.25, "u2": 0.25, "s4": 0.5, "u4": 0.5,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "negate", "abs", "sign", "floor", "ceil", "round-nearest-afz", "rsqrt",
+    "sqrt", "cbrt", "logistic", "sine", "cosine", "atan2", "compare",
+    "select", "and", "or", "xor", "not", "clamp", "convert",
+}
+
+_FREE = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "reshape", "after-all", "iota", "partition-id",
+    "replica-id", "custom-call",  # custom-call bytes handled separately
+}
+
+_COLLECTIVES = {
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "all-reduce-start",
+    "all-gather-start", "collective-permute-start",
+}
+
+
+# ---------------------------------------------------------------------------
+# Shapes
+# ---------------------------------------------------------------------------
+
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+
+def shape_bytes(type_str: str) -> float:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_elems(type_str: str) -> float:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0.0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return float(n)
+
+
+def shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+# ---------------------------------------------------------------------------
+# Parsing
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+    trip: Optional[int] = None
+    called: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # op name -> type str
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP_RE = re.compile(r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.+)$")
+_CALLED_RE = re.compile(
+    r"(?:to_apply|calls|condition|body)=%?([\w\.\-]+)")
+_BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _split_type_and_rest(s: str) -> Tuple[str, str]:
+    """'f32[8]{1,0} dot(%a, %b), attrs' -> ('f32[8]{1,0}', 'dot(...), attrs')."""
+    s = s.strip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                return s[: i + 1], s[i + 1:].strip()
+    i = s.find(" ")
+    return (s, "") if i < 0 else (s[:i], s[i + 1:].strip())
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip()) if line.rstrip().endswith("{") else None
+            if m and ("->" in line):
+                cur = Computation(m.group(1))
+                if line.lstrip().startswith("ENTRY"):
+                    entry = m.group(1)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        type_str, rest2 = _split_type_and_rest(rest)
+        # opcode is token up to '('
+        p = rest2.find("(")
+        if p < 0:
+            continue
+        opcode = rest2[:p].strip()
+        # operand section: up to matching close paren
+        depth, j = 0, p
+        for j in range(p, len(rest2)):
+            depth += rest2[j] == "("
+            depth -= rest2[j] == ")"
+            if depth == 0:
+                break
+        operand_str = rest2[p + 1: j]
+        attrs = rest2[j + 1:]
+        op = Op(name=name, type_str=type_str, opcode=opcode,
+                operands=_OPERAND_RE.findall(operand_str), attrs=attrs)
+        tm = _TRIP_RE.search(attrs)
+        if tm:
+            op.trip = int(tm.group(1))
+        op.called = _CALLED_RE.findall(attrs)
+        bm = _BRANCH_RE.search(attrs)
+        if bm:
+            op.called += _OPERAND_RE.findall(bm.group(1))
+        cur.ops.append(op)
+        cur.shapes[name] = type_str
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: Dict[str, float] = field(default_factory=dict)  # raw tensor bytes
+    coll_wire: float = 0.0            # ring-model wire bytes
+    convert_bytes: float = 0.0        # pure-convert fusions: mostly CPU-backend
+    #                                   bf16->f32 legalization; absent on TPU
+    unknown_trip_whiles: int = 0
+
+    def add(self, other: "Cost", scale: float = 1.0) -> None:
+        self.flops += scale * other.flops
+        self.bytes += scale * other.bytes
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + scale * v
+        self.coll_wire += scale * other.coll_wire
+        self.convert_bytes += scale * other.convert_bytes
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+
+
+_GROUPS_BRACE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[([\d,]+)\]<=\[")
+
+
+def _group_size(attrs: str) -> int:
+    m = _GROUPS_BRACE.search(attrs)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA.search(attrs)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",")]
+        return dims[-1] if len(dims) > 1 else dims[0]
+    return 1
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    out_elems = shape_elems(op.type_str)
+    lhs = comp.shapes.get(op.operands[0]) if op.operands else None
+    if lhs is None:
+        return 2.0 * out_elems  # fallback
+    ldims = shape_dims(lhs)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    k = 1.0
+    if m and m.group(1):
+        for d in m.group(1).split(","):
+            if int(d) < len(ldims):
+                k *= ldims[int(d)]
+    return 2.0 * out_elems * k
+
+
+def _collective_cost(op: Op, comp: Computation) -> Tuple[str, float, float]:
+    """Returns (kind, tensor_bytes, wire_bytes)."""
+    kind = op.opcode.replace("-start", "")
+    g = _group_size(op.attrs)
+    out_b = shape_bytes(op.type_str)
+    in_b = sum(shape_bytes(comp.shapes.get(o, "")) for o in op.operands)
+    frac = (g - 1) / g if g > 1 else 0.0
+    if kind == "all-reduce":
+        return kind, in_b, 2.0 * in_b * frac
+    if kind == "all-gather":
+        return kind, out_b, out_b * frac
+    if kind == "reduce-scatter":
+        return kind, in_b, in_b * frac
+    if kind == "all-to-all":
+        return kind, max(in_b, out_b), max(in_b, out_b) * frac
+    if kind in ("collective-permute", "collective-broadcast"):
+        return kind, max(in_b, out_b), max(in_b, out_b)
+    return kind, max(in_b, out_b), max(in_b, out_b)
+
+
+def _op_bytes(op: Op, comp: Computation) -> float:
+    """HBM traffic proxy at op boundary."""
+    out_b = shape_bytes(op.type_str)
+    if op.opcode in ("slice", "dynamic-slice", "gather"):
+        return 2.0 * out_b
+    if op.opcode == "dynamic-update-slice":
+        upd = shape_bytes(comp.shapes.get(op.operands[1], "")) if len(op.operands) > 1 else 0.0
+        return 2.0 * upd + out_b * 0.0  # in-place update: read+write the slice
+    if op.opcode == "broadcast":
+        return out_b
+    in_b = sum(shape_bytes(comp.shapes.get(o, "")) for o in op.operands)
+    return in_b + out_b
+
+
+_CONVERT_ONLY_OPS = {"parameter", "convert", "copy", "bitcast", "transpose"}
+
+
+def _is_convert_only(comp: Optional[Computation]) -> bool:
+    if comp is None:
+        return False
+    has_convert = any(op.opcode == "convert" for op in comp.ops)
+    return has_convert and all(op.opcode in _CONVERT_ONLY_OPS for op in comp.ops)
+
+
+def analyze(comps: Dict[str, Computation], root: str = "__entry__",
+            _memo: Optional[Dict[str, Cost]] = None) -> Cost:
+    memo = _memo if _memo is not None else {}
+
+    def comp_cost(name: str) -> Cost:
+        if name in memo:
+            return memo[name]
+        memo[name] = Cost()  # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        c = Cost()
+        for op in comp.ops:
+            if op.opcode == "while":
+                trip = op.trip if op.trip is not None else 1
+                if op.trip is None:
+                    c.unknown_trip_whiles += 1
+                for sub in op.called:
+                    c.add(comp_cost(sub), scale=trip)
+            elif op.opcode == "conditional":
+                subs = [comp_cost(s) for s in op.called]
+                if subs:
+                    # charge the max-cost branch
+                    best = max(subs, key=lambda s: s.flops + s.bytes)
+                    c.add(best)
+            elif op.opcode == "fusion":
+                inner = comp_cost(op.called[0]) if op.called else Cost()
+                c.flops += inner.flops
+                for k, v in inner.coll_bytes.items():
+                    c.coll_bytes[k] = c.coll_bytes.get(k, 0.0) + v
+                c.coll_wire += inner.coll_wire
+                # bytes only at the fusion boundary; pure-convert fusions are
+                # tracked separately (CPU bf16 legalization, absent on TPU)
+                fb = _op_bytes(op, comp)
+                if _is_convert_only(comps.get(op.called[0]) if op.called else None):
+                    c.convert_bytes += fb
+                else:
+                    c.bytes += fb
+            elif op.opcode in _COLLECTIVES:
+                kind, tb, wb = _collective_cost(op, comp)
+                c.coll_bytes[kind] = c.coll_bytes.get(kind, 0.0) + tb
+                c.coll_wire += wb
+                c.bytes += _op_bytes(op, comp)
+            elif op.opcode == "call":
+                for sub in op.called:
+                    c.add(comp_cost(sub))
+            elif op.opcode in ("dot", "convolution"):
+                c.flops += _dot_flops(op, comp)
+                c.bytes += _op_bytes(op, comp)
+            elif op.opcode in ("reduce", "reduce-window"):
+                in_elems = sum(shape_elems(comp.shapes.get(o, ""))
+                               for o in op.operands[: max(1, len(op.operands) // 2)])
+                c.flops += in_elems
+                c.bytes += _op_bytes(op, comp)
+            elif op.opcode in _ELEMENTWISE:
+                c.flops += shape_elems(op.type_str)
+                c.bytes += _op_bytes(op, comp)
+            elif op.opcode in _FREE:
+                if op.opcode == "custom-call":
+                    c.bytes += _op_bytes(op, comp)
+            else:
+                c.bytes += _op_bytes(op, comp)
+        memo[name] = c
+        return c
+
+    # analyze from entry, but make fusion computations only counted via calls
+    return comp_cost(root)
+
+
+def analyze_hlo_text(text: str) -> Cost:
+    return analyze(parse_hlo(text))

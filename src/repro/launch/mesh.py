@@ -1,0 +1,32 @@
+"""Production mesh definitions (TPU v5e pods).
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; only the dry-run entrypoint forces the 512-device host platform.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+
+def _mk(shape, axes) -> Mesh:
+    from jax.sharding import AxisType
+
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 = 256 chips per pod; multi_pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """Single-device mesh with the same axis names (CPU tests)."""
+    return _mk((1, 1), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

@@ -1,0 +1,122 @@
+"""Roofline analysis from dry-run artifacts (TPU v5e targets).
+
+Per (arch x shape x mesh):
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs         (197 TF bf16)
+    memory term     = HLO_bytes_per_device / HBM_bw             (819 GB/s)
+    collective term = wire_bytes_per_device / ICI link bw       (50 GB/s)
+
+plus MODEL_FLOPS = 6*N(_active)*D (dense/MoE) and the useful-compute ratio
+MODEL_FLOPS / (HLO_FLOPs * chips).  The HLO numbers come from
+:mod:`repro.launch.hlo_cost` (trip-count-corrected, per-device).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+from repro.configs import get_model_config, get_shape
+
+PEAK_FLOPS = 197e12        # bf16 FLOP/s per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+
+@dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_total: float
+    hlo_flops_total: float
+    useful_ratio: float
+    note: str = ""
+
+    def as_dict(self) -> Dict[str, Any]:
+        return dict(self.__dict__)
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic 'useful' FLOPs for the whole step (all chips)."""
+    cfg = get_model_config(arch)
+    shape = get_shape(shape_name)
+    n_act = cfg.active_param_count()
+    if shape.mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence + KV-cache attention reads (flops-wise
+    # the cache dot products: 2 * 2 * L * kv_dim * ctx per sequence)
+    ctx = min(shape.seq_len, cfg.window) if (cfg.window and cfg.attention in
+                                             ("swa", "hybrid")) else shape.seq_len
+    attn = 0.0
+    if cfg.attention != "none" and cfg.n_heads:
+        attn = 4.0 * cfg.n_layers * cfg.n_heads * cfg.head_dim * ctx
+    return shape.global_batch * (2.0 * n_act + attn)
+
+
+def row_from_record(rec: Dict[str, Any]) -> Optional[RooflineRow]:
+    if rec.get("status") != "ok":
+        return None
+    hlo = rec["hlo"]
+    chips = rec["chips"]
+    compute_s = hlo["flops_per_device"] / PEAK_FLOPS
+    memory_s = hlo["bytes_per_device"] / HBM_BW
+    coll_s = hlo["collective_wire_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = hlo["flops_per_device"] * chips
+    return RooflineRow(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"], chips=chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=coll_s,
+        dominant=dominant, model_flops_total=mf, hlo_flops_total=hlo_total,
+        useful_ratio=mf / hlo_total if hlo_total else 0.0,
+    )
+
+
+_SUGGEST = {
+    "compute": ("reduce redundant FLOPs (remat policy, masked-block skipping, "
+                "MoE dispatch) or grow per-chip work to amortize"),
+    "memory": ("improve operand reuse / fusion, shrink the working set "
+               "(smaller cache dtype, activation layout) or raise arithmetic "
+               "intensity with larger blocks"),
+    "collective": ("re-shard to cut resharding (2D sharding of the dominant "
+                   "weight, all-gather -> reduce-scatter conversion, overlap "
+                   "collectives with compute)"),
+}
+
+
+def render_table(rows: List[RooflineRow]) -> str:
+    hdr = (f"| {'arch':26s} | {'shape':11s} | {'mesh':8s} | compute(s) | "
+           f"memory(s) | collective(s) | dominant | useful |")
+    sep = "|" + "-" * (len(hdr) - 2) + "|"
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r.arch:26s} | {r.shape:11s} | {r.mesh:8s} | {r.compute_s:10.4f} | "
+            f"{r.memory_s:9.4f} | {r.collective_s:13.4f} | {r.dominant:8s} | "
+            f"{r.useful_ratio:6.3f} |")
+    return "\n".join(out)
+
+
+def suggestion(row: RooflineRow) -> str:
+    return _SUGGEST[row.dominant]
+
+
+def report_from_json(path: str) -> List[RooflineRow]:
+    with open(path) as f:
+        recs = json.load(f)
+    rows = []
+    for rec in recs:
+        r = row_from_record(rec)
+        if r is not None:
+            rows.append(r)
+    return rows

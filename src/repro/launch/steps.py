@@ -1,0 +1,129 @@
+"""Step builders + ShapeDtypeStruct input specs for every (arch x shape).
+
+``input_specs(cfg, shape)`` returns device-allocation-free stand-ins for all
+step inputs (the shannon/kernels pattern); the dry-run lowers
+``jax.jit(step, in_shardings=..., out_shardings=...)`` against them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.optim import adamw, linear_warmup_cosine
+
+Params = Any
+
+
+def text_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Token positions available for text after frontend tokens (VLM)."""
+    if cfg.frontend is not None and not cfg.enc_dec:
+        return max(1, shape.seq_len - cfg.frontend.n_tokens)
+    return shape.seq_len
+
+
+def params_struct(cfg: ModelConfig):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(functools.partial(T.init_params, cfg=cfg), key)
+
+
+def opt_struct(cfg: ModelConfig, optimizer):
+    return jax.eval_shape(optimizer.init, params_struct(cfg))
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    b = shape.global_batch
+    s = text_len(cfg, shape)
+    batch: Dict[str, jax.ShapeDtypeStruct] = {
+        "tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((b, s), jnp.int32),
+    }
+    if cfg.frontend is not None:
+        fe = cfg.frontend
+        n = fe.n_tokens if not cfg.enc_dec else cfg.enc_seq
+        batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (b, n, fe.embed_dim), jnp.dtype(cfg.dtype))
+    return batch
+
+
+def decode_state_struct(cfg: ModelConfig, shape: ShapeConfig):
+    b = shape.global_batch
+    fe_struct = None
+    if cfg.frontend is not None:
+        fe = cfg.frontend
+        n = fe.n_tokens if not cfg.enc_dec else cfg.enc_seq
+        fe_struct = jax.ShapeDtypeStruct((b, n, fe.embed_dim), jnp.dtype(cfg.dtype))
+
+    def build(params, fe_arr):
+        return T.init_decode_state(params, cfg, b, shape.seq_len,
+                                   frontend_embeds=fe_arr)
+
+    if fe_struct is None:
+        return jax.eval_shape(lambda p: build(p, None), params_struct(cfg))
+    return jax.eval_shape(build, params_struct(cfg), fe_struct)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """All step inputs as ShapeDtypeStructs (no device allocation)."""
+    if shape.mode == "train":
+        return {"batch": batch_specs(cfg, shape)}
+    if shape.mode == "prefill":
+        bs = batch_specs(cfg, shape)
+        bs.pop("labels")
+        return {"batch": bs}
+    # decode
+    b = shape.global_batch
+    return {
+        "token": jax.ShapeDtypeStruct((b,), jnp.int32),
+        "state": decode_state_struct(cfg, shape),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(total_steps: int = 10_000):
+    return adamw(linear_warmup_cosine(3e-4, 500, total_steps),
+                 weight_decay=0.1, grad_clip=1.0)
+
+
+def make_train_step(cfg: ModelConfig, optimizer, impl: str = "blocked"):
+    def train_step(params, opt_state, batch):
+        def loss(p):
+            return T.loss_fn(p, cfg, batch, impl=impl)
+
+        (l, metrics), grads = jax.value_and_grad(loss, has_aux=True)(params)
+        new_params, new_opt = optimizer.update(grads, params, opt_state)
+        return new_params, new_opt, {"loss": l, **metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig, impl: str = "blocked"):
+    """Serving prefill: run the prompt, emit last-position logits + the primed
+    decode state (full-seq logits are never materialized)."""
+
+    def prefill_step(params, batch):
+        logits, state = T.prefill(params, cfg, batch["tokens"],
+                                  batch.get("frontend_embeds"),
+                                  max_len=shape.seq_len, impl=impl,
+                                  last_only=True)
+        return logits[:, 0], state
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: ONE new token against the full KV cache / SSM state."""
+
+    def serve_step(params, state, token):
+        logits, new_state = T.decode_step(params, cfg, state, token)
+        return logits, new_state
+
+    return serve_step

@@ -1,0 +1,312 @@
+"""Attention layers: GQA, causal / bidirectional / cross, sliding-window,
+memory-efficient blocked prefill, and single-token KV-cache decode.
+
+Three interchangeable implementations:
+
+* ``naive``   — materializes the full (S, S) score matrix; oracle + smoke tests.
+* ``blocked`` — lax.scan over query chunks with online softmax; bounded memory,
+                used by the production dry-run for long sequences.
+* ``pallas``  — flash-attention TPU kernel from ``repro.kernels.flash_attention``
+                (validated in interpret mode on CPU).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init
+from repro.models.sharding import shard
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Ring-buffer KV cache. ``k``/``v``: (B, C, KV, Dh); ``length``: (B,)
+    per-sequence count of tokens ever written (positions wrap modulo C for
+    SWA). Per-sequence lengths let a continuous-batching server admit
+    requests into slots at different times."""
+
+    k: jnp.ndarray
+    v: jnp.ndarray
+    length: jnp.ndarray  # (B,) int32
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, dtype, *, cross: bool = False) -> Dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, cfg.q_dim, dtype),
+        "wk": dense_init(ks[1], d, cfg.kv_dim, dtype),
+        "wv": dense_init(ks[2], d, cfg.kv_dim, dtype),
+        "wo": dense_init(ks[3], cfg.q_dim, d, dtype),
+    }
+
+
+def _split_heads(x: jnp.ndarray, n: int, dh: int) -> jnp.ndarray:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n, dh)
+
+
+# ---------------------------------------------------------------------------
+# Core score/softmax/combine — naive
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q: (B,Sq,H,Dh), k: (B,Sk,KV,Dh) -> scores (B,KV,G,Sq,Sk) fp32."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg.astype(jnp.float32), k.astype(jnp.float32))
+    return s * (dh ** -0.5)
+
+
+def naive_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    kv_valid: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    """Full-matrix attention. q (B,Sq,H,Dh), k/v (B,Sk,KV,Dh) -> (B,Sq,H,Dh).
+
+    ``q_offset``: absolute position of q[0] (for decode/chunked use).
+    ``kv_valid``: optional (B, Sk) bool mask of valid cache slots.
+    """
+    b, sq, h, dh = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    scores = _gqa_scores(q, k)  # (B,KV,G,Sq,Sk)
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    mask5 = mask[None, None, None]
+    if kv_valid is not None:
+        mask5 = mask5 & kv_valid[:, None, None, None, :]
+    scores = jnp.where(mask5, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v.astype(jnp.float32))
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked (memory-efficient) prefill attention
+# ---------------------------------------------------------------------------
+
+
+def blocked_attention(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool,
+    window: Optional[int] = None,
+    q_chunk: int = 512,
+    kv_chunk: int = 1024,
+) -> jnp.ndarray:
+    """Online-softmax attention scanned over query chunks.
+
+    For sliding-window attention each query chunk only reads the
+    ``window + q_chunk`` keys that can be in range (dynamic slice), so compiled
+    FLOPs/bytes scale O(S * window) instead of O(S^2).
+    """
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    if s % q_chunk:
+        q_chunk = s  # degenerate small case
+    n_q = s // q_chunk
+
+    qg = q.reshape(b, s, kvh, g, dh)
+
+    if window is not None:
+        # SWA: bounded KV view per query chunk.
+        span = window + q_chunk
+        span = min(span, s)
+        pad = span  # left-pad so dynamic_slice never clamps
+        kp = jnp.pad(k, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+        vp = jnp.pad(v, ((0, 0), (pad, 0), (0, 0), (0, 0)))
+
+        def qstep(_, i):
+            qs = i * q_chunk
+            qc = jax.lax.dynamic_slice_in_dim(qg, qs, q_chunk, axis=1)
+            # keys for absolute positions [qs + q_chunk - span, qs + q_chunk)
+            start = qs + q_chunk - span + pad
+            kc = jax.lax.dynamic_slice_in_dim(kp, start, span, axis=1)
+            vc = jax.lax.dynamic_slice_in_dim(vp, start, span, axis=1)
+            qpos = qs + jnp.arange(q_chunk)
+            kpos = qs + q_chunk - span + jnp.arange(span)
+            mask = (kpos[None, :] <= qpos[:, None]) & (
+                kpos[None, :] > qpos[:, None] - window) & (kpos[None, :] >= 0)
+            sc = jnp.einsum("bqkgd,bskd->bkgqs", qc.astype(jnp.float32),
+                            kc.astype(jnp.float32)) * (dh ** -0.5)
+            sc = jnp.where(mask[None, None, None], sc, NEG_INF)
+            pr = jax.nn.softmax(sc, axis=-1)
+            oc = jnp.einsum("bkgqs,bskd->bqkgd", pr, vc.astype(jnp.float32))
+            return None, oc.astype(q.dtype)
+
+        _, chunks = jax.lax.scan(qstep, None, jnp.arange(n_q))
+        out = jnp.moveaxis(chunks, 0, 1).reshape(b, s, kvh, g, dh)
+        return out.reshape(b, s, h, dh)
+
+    # Full (causal or bidirectional): online softmax over KV chunks.
+    if s % kv_chunk:
+        kv_chunk = s
+    n_kv = s // kv_chunk
+
+    def qstep(_, i):
+        qs = i * q_chunk
+        qc = jax.lax.dynamic_slice_in_dim(qg, qs, q_chunk, axis=1).astype(jnp.float32)
+        qpos = qs + jnp.arange(q_chunk)
+
+        def kvstep(carry, j):
+            m, l, acc = carry
+            ks_ = j * kv_chunk
+            kc = jax.lax.dynamic_slice_in_dim(k, ks_, kv_chunk, axis=1).astype(jnp.float32)
+            vc = jax.lax.dynamic_slice_in_dim(v, ks_, kv_chunk, axis=1).astype(jnp.float32)
+            sc = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc) * (dh ** -0.5)
+            if causal:
+                kpos = ks_ + jnp.arange(kv_chunk)
+                msk = kpos[None, :] <= qpos[:, None]
+                sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum("bkgqs,bskd->bkgqd", p, vc)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kvstep, (m0, l0, a0), jnp.arange(n_kv))
+        oc = acc / jnp.maximum(l[..., None], 1e-30)          # (b,kv,g,qc,dh)
+        return None, jnp.moveaxis(oc, 3, 1).astype(q.dtype)  # (b,qc,kv,g,dh)
+
+    _, chunks = jax.lax.scan(qstep, None, jnp.arange(n_q))
+    out = jnp.moveaxis(chunks, 0, 1).reshape(b, s, kvh, g, dh)
+    return out.reshape(b, s, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# Layer-level apply
+# ---------------------------------------------------------------------------
+
+
+def attention_prefill(
+    p: Dict,
+    x: jnp.ndarray,
+    cfg: ModelConfig,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    positions: Optional[jnp.ndarray] = None,
+    impl: str = "naive",
+    kv_from: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, jnp.ndarray]]:
+    """Returns (output (B,S,d), (k, v)) — k/v returned for cache priming.
+
+    ``kv_from``: encoder output for cross-attention (whisper decoder).
+    """
+    b, s, _ = x.shape
+    src = x if kv_from is None else kv_from
+    q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(src @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(src @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+    q = shard(q, "batch", "seq", "heads", None)
+    k = shard(k, "batch", "seq", "kv_heads", None)
+    v = shard(v, "batch", "seq", "kv_heads", None)
+    if cfg.use_rope and kv_from is None:
+        pos = positions if positions is not None else jnp.arange(s)[None, :]
+        q = apply_rope(q, jnp.broadcast_to(pos, (b, s)), cfg.rope_theta)
+        k = apply_rope(k, jnp.broadcast_to(pos, (b, s)), cfg.rope_theta)
+    if impl == "blocked" and kv_from is None:
+        from repro.models.flash_xla import flash_attention_xla
+
+        qg = q.reshape(b, s, cfg.n_kv_heads, cfg.group_size, cfg.head_dim)
+        out = flash_attention_xla(qg, k, v, causal, window)
+        out = out.reshape(b, s, cfg.n_heads, cfg.head_dim)
+    elif impl == "pallas" and kv_from is None:
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        out = fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    else:
+        out = naive_attention(q, k, v, causal=causal and kv_from is None, window=window)
+    out = shard(out, "batch", "seq", "heads", None)
+    y = out.reshape(b, s, cfg.q_dim) @ p["wo"]
+    return shard(y, "batch", "seq", "embed"), (k, v)
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> KVCache:
+    """``max_len`` should be the window size for SWA layers."""
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((batch,), jnp.int32))
+
+
+def attention_decode(
+    p: Dict,
+    x: jnp.ndarray,
+    cache: KVCache,
+    cfg: ModelConfig,
+    *,
+    window: Optional[int] = None,
+    cross_kv: Optional[Tuple[jnp.ndarray, jnp.ndarray]] = None,
+) -> Tuple[jnp.ndarray, KVCache]:
+    """One-token decode. x: (B, 1, d). Cache is a ring buffer of capacity C
+    (== window for SWA, == max context for full attention)."""
+    b = x.shape[0]
+    q = _split_heads(x @ p["wq"], cfg.n_heads, cfg.head_dim)
+    q = shard(q, "batch", None, "heads", None)
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        out = naive_attention(q, k, v, causal=False)
+        y = out.reshape(b, 1, cfg.q_dim) @ p["wo"]
+        return shard(y, "batch", None, "embed"), cache
+
+    pos = cache.length  # (B,) absolute position of each sequence's new token
+    if cfg.use_rope:
+        q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_new = _split_heads(x @ p["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v_new = _split_heads(x @ p["wv"], cfg.n_kv_heads, cfg.head_dim)
+    if cfg.use_rope:
+        k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+    cap = cache.k.shape[1]
+    slot = jnp.mod(pos, cap)                                     # (B,)
+    bidx = jnp.arange(b)
+    k = cache.k.at[bidx, slot].set(k_new[:, 0].astype(cache.k.dtype))
+    v = cache.v.at[bidx, slot].set(v_new[:, 0].astype(cache.v.dtype))
+    k = shard(k, "batch", "cache", "kv_heads", None)
+    v = shard(v, "batch", "cache", "kv_heads", None)
+
+    # absolute position of each cache slot (ring semantics), per sequence
+    idx = jnp.arange(cap)[None, :]                               # (1, cap)
+    slot_b = slot[:, None]
+    n_written = (pos + 1)[:, None]
+    wrapped = n_written > cap
+    abs_pos = jnp.where(
+        idx <= slot_b, n_written - 1 - (slot_b - idx),
+        jnp.where(wrapped, n_written - 1 - (slot_b + cap - idx), -1))
+    kv_valid = abs_pos >= 0
+    if window is not None:
+        kv_valid &= abs_pos > pos[:, None] - window
+
+    out = naive_attention(q, k, v, causal=False, kv_valid=kv_valid)
+    y = out.reshape(b, 1, cfg.q_dim) @ p["wo"]
+    return shard(y, "batch", None, "embed"), KVCache(k, v, cache.length + 1)

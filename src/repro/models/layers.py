@@ -1,0 +1,212 @@
+"""Shared neural-net layers in raw JAX (no flax): norms, RoPE, MLPs, embeds.
+
+Parameters are plain nested dicts of jnp arrays.  Every ``init_*`` function
+takes a jax PRNG key and returns the param pytree; every ``apply`` is a pure
+function ``f(params, x, ...)``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    """Truncated-normal fan-in init (LeCun) used for all projection matrices."""
+    std = 1.0 / math.sqrt(d_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (d_in, d_out)) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(kind: str, d: int, dtype) -> Params:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+def apply_norm(kind: str, p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """Norms with fp32 *statistics* but input-dtype tensor math.
+
+    Upcasting the whole activation to fp32 here makes XLA save an fp32 copy
+    of every remat-checkpointed layer input (2x train memory, measured in
+    EXPERIMENTS.md §Perf); reducing in fp32 and scaling in-place keeps the
+    stability where it matters (the accumulation) without the blowup.
+    """
+    d = x.shape[-1]
+    if kind == "rmsnorm":
+        # fp32 accumulation WITHOUT an explicit convert of x: an f32-convert
+        # here gets loop-hoisted by XLA into an fp32 copy of the whole remat
+        # stack (L,B,S,D) — measured 172 GB/device on internvl2 train_4k.
+        sq = jnp.einsum("...d,...d->...", x, x,
+                        preferred_element_type=jnp.float32)[..., None]
+        inv = jax.lax.rsqrt(sq / d + eps).astype(x.dtype)
+        return x * inv * p["scale"].astype(x.dtype)
+    if kind == "layernorm":
+        s1 = jnp.einsum("...d->...", x, preferred_element_type=jnp.float32)[..., None]
+        s2 = jnp.einsum("...d,...d->...", x, x,
+                        preferred_element_type=jnp.float32)[..., None]
+        mu = s1 / d
+        var = jnp.maximum(s2 / d - jnp.square(mu), 0.0)
+        inv = jax.lax.rsqrt(var + eps)
+        y = (x - mu.astype(x.dtype)) * inv.astype(x.dtype)
+        return y * p["scale"].astype(x.dtype) + p["bias"].astype(x.dtype)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def activation_fn(name: str):
+    if name in ("silu", "geglu"):  # gate nonlinearity; geglu gates with gelu
+        return jax.nn.silu if name == "silu" else jax.nn.gelu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "relu2":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+def is_gated(name: str) -> bool:
+    return name in ("silu", "geglu")
+
+
+# ---------------------------------------------------------------------------
+# Dense FFN (gated or plain)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model: int, d_ff: int, activation: str, dtype) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d_model, d_ff, dtype),
+         "down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if is_gated(activation):
+        p["gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def apply_mlp(p: Params, x: jnp.ndarray, activation: str) -> jnp.ndarray:
+    act = activation_fn(activation)
+    up = x @ p["up"]
+    if is_gated(activation):
+        up = act(x @ p["gate"]) * up
+    else:
+        up = act(up)
+    return up @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                        # (half,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                           # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(max_len: int, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal position table (max_len, d)."""
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    tab = jnp.zeros((max_len, d), jnp.float32)
+    tab = tab.at[:, 0::2].set(jnp.sin(pos * div))
+    tab = tab.at[:, 1::2].set(jnp.cos(pos * div))
+    return tab
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def sinusoidal_at(pos: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Sinusoidal position vector (d,) at a (traced) scalar position."""
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    ang = pos.astype(jnp.float32) * div
+    out = jnp.zeros((d,), jnp.float32)
+    out = out.at[0::2].set(jnp.sin(ang))
+    out = out.at[1::2].set(jnp.cos(ang))
+    return out
+
+
+def _xent_fwd_math(logits, labels, mask):
+    """Per-position NLL (fp32). The gold-logit lookup is a where/iota
+    reduction rather than take_along_axis: it fuses and partitions cleanly
+    when the vocab dim is sharded (gather would force an all-gather)."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    gold = jnp.sum(jnp.where(vocab_ids == labels[..., None], lf, 0.0), axis=-1)
+    nll = logz - gold
+    if mask is None:
+        m = jnp.ones(labels.shape, jnp.float32)
+    else:
+        m = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.sum(nll * m) / denom, (logz, m, denom)
+
+
+@jax.custom_vjp
+def _xent(logits, labels, mask):
+    return _xent_fwd_math(logits, labels, mask)[0]
+
+
+def _xent_vjp_fwd(logits, labels, mask):
+    loss, (logz, m, denom) = _xent_fwd_math(logits, labels, mask)
+    # residuals stay in the logits dtype — the default VJP keeps an fp32
+    # softmax of the full (B, S, V) logits alive, 2-4x the activation memory
+    return loss, (logits, labels, logz, m, denom)
+
+
+def _xent_vjp_bwd(res, g):
+    logits, labels, logz, m, denom = res
+    p = jnp.exp(logits.astype(jnp.float32) - logz[..., None])
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+    onehot = (vocab_ids == labels[..., None]).astype(jnp.float32)
+    dlogits = (p - onehot) * (g * m / denom)[..., None]
+    return dlogits.astype(logits.dtype), None, None
+
+
+_xent.defvjp(_xent_vjp_fwd, _xent_vjp_bwd)
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Mean cross-entropy over valid positions. logits (..., V), labels (...)."""
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    return _xent(logits, labels, mask)

@@ -1,0 +1,200 @@
+"""Mixture-of-experts FFN with top-k routing.
+
+Two dispatch implementations:
+
+* ``dispatch="sort"`` (default, deployable) — grouped sort-based dispatch:
+  tokens are split into G groups (the launch layer aligns G with the mesh
+  ``data`` axis), each group argsorts its token->expert assignments and
+  gathers at most ``capacity`` tokens per expert into an (G, E, C, d) buffer
+  sharded (data, model, -, -).  The only O(big) matmuls left are the expert
+  FFNs themselves; the group->expert reshard is the all-to-all of classic
+  expert parallelism.
+
+* ``dispatch="dense"`` — the GShard/Switch one-hot-einsum formulation.
+  Kept as the §Perf baseline: its (T, E, C) dispatch tensors are O(T^2 k d / E)
+  compute and blow past HBM at production shapes (measured in
+  EXPERIMENTS.md §Perf) — the sort path exists because of that measurement.
+
+Aux losses: Switch load-balance loss + router z-loss.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import activation_fn, dense_init, is_gated
+from repro.models.sharding import shard
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> Dict:
+    moe = cfg.moe
+    d, f, e = cfg.d_model, moe.d_ff_expert, moe.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),  # router kept fp32
+        "up": jax.vmap(lambda k: dense_init(k, d, f, dtype))(jax.random.split(ks[1], e)),
+        "down": jax.vmap(lambda k: dense_init(k, f, d, dtype))(jax.random.split(ks[2], e)),
+    }
+    if is_gated(cfg.activation):
+        p["gate"] = jax.vmap(lambda k: dense_init(k, d, f, dtype))(jax.random.split(ks[3], e))
+    return p
+
+
+def _capacity(n_tokens: int, n_experts: int, top_k: int, factor: float) -> int:
+    cap = int(n_tokens * top_k / n_experts * factor)
+    return max(8, ((cap + 7) // 8) * 8)  # pad to 8 for TPU-friendly tiles
+
+
+def _route(p: Dict, xt: jnp.ndarray, moe) -> Tuple[jnp.ndarray, jnp.ndarray, Dict]:
+    """xt: (T, d) -> (gate_vals (T,k), idx (T,k), aux)."""
+    t = xt.shape[0]
+    logits = xt.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, moe.top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    me = probs.mean(axis=0)
+    onehot = jax.nn.one_hot(idx, moe.n_experts, dtype=jnp.float32)
+    ce = onehot.sum(axis=(0, 1)) / (t * moe.top_k)
+    aux = {
+        "load_balance_loss": moe.n_experts * jnp.sum(me * ce),
+        "router_z_loss": jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1))),
+        "expert_fraction": ce,
+    }
+    return gate_vals, idx, aux
+
+
+# ---------------------------------------------------------------------------
+# Sort-based dispatch (deployable default)
+# ---------------------------------------------------------------------------
+
+
+def _sort_dispatch_group(xg, gate, idx, e: int, cap: int, k: int):
+    """One group's dispatch. xg: (Tg, d); gate/idx: (Tg, k).
+    Returns (xin (E*C, d), slot_token (E*C,), slot_gate (E*C,))."""
+    tg = xg.shape[0]
+    flat_e = idx.reshape(-1)                               # (Tg*k,)
+    flat_gate = gate.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    pos = jnp.arange(tg * k) - starts[sorted_e]
+    valid = pos < cap
+    slot = jnp.where(valid, sorted_e * cap + pos, e * cap)  # dummy slot E*C
+    token_sorted = order // k
+    # slot -> token map (dummy row at the end, dropped after scatter)
+    slot_token = jnp.full((e * cap + 1,), tg, jnp.int32).at[slot].set(
+        token_sorted.astype(jnp.int32), mode="drop")[:e * cap]
+    gate_sorted = flat_gate[order]
+    slot_gate = jnp.zeros((e * cap + 1,), jnp.float32).at[slot].set(
+        gate_sorted * valid, mode="drop")[:e * cap]
+    xg_pad = jnp.concatenate([xg, jnp.zeros_like(xg[:1])], axis=0)
+    xin = xg_pad[slot_token]                               # (E*C, d)
+    dropped = 1.0 - valid.mean()
+    return xin, slot_token, slot_gate, dropped
+
+
+def _apply_moe_sort(p: Dict, x: jnp.ndarray, cfg: ModelConfig, n_groups: int
+                    ) -> Tuple[jnp.ndarray, Dict]:
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    g = max(1, n_groups)
+    while t % g:
+        g //= 2
+    tg = t // g
+    e, k = moe.n_experts, moe.top_k
+    cap = _capacity(tg, e, k, moe.capacity_factor)
+
+    xt = x.reshape(t, d)
+    gate_vals, idx, aux = _route(p, xt, moe)
+
+    xg = xt.reshape(g, tg, d)
+    gateg = gate_vals.reshape(g, tg, k)
+    idxg = idx.reshape(g, tg, k)
+    xin, slot_token, slot_gate, dropped = jax.vmap(
+        lambda a, b_, c: _sort_dispatch_group(a, b_, c, e, cap, k))(xg, gateg, idxg)
+    aux["dropped_fraction"] = dropped.mean()
+
+    # (G, E, C, d): groups on data, experts on model -> the EP all-to-all edge
+    xin = xin.reshape(g, e, cap, d)
+    xin = shard(xin, "batch", "expert", None, "embed")
+
+    act = activation_fn(cfg.activation)
+    up = jnp.einsum("gecd,edf->gecf", xin, p["up"])
+    if is_gated(cfg.activation):
+        up = act(jnp.einsum("gecd,edf->gecf", xin, p["gate"])) * up
+    else:
+        up = act(up)
+    out = jnp.einsum("gecf,efd->gecd", up, p["down"])
+    out = shard(out, "batch", "expert", None, "embed")
+
+    # combine: gather back per group and weighted scatter-add over tokens
+    def combine_group(out_g, slot_token_g, slot_gate_g):
+        flat = out_g.reshape(e * cap, d).astype(jnp.float32)
+        y = jnp.zeros((tg + 1, d), jnp.float32).at[slot_token_g].add(
+            flat * slot_gate_g[:, None])
+        return y[:tg]
+
+    y = jax.vmap(combine_group)(out, slot_token, slot_gate)
+    return y.reshape(b, s, d).astype(x.dtype), aux
+
+
+# ---------------------------------------------------------------------------
+# Dense (GShard) dispatch — §Perf baseline
+# ---------------------------------------------------------------------------
+
+
+def _apply_moe_dense(p: Dict, x: jnp.ndarray, cfg: ModelConfig
+                     ) -> Tuple[jnp.ndarray, Dict]:
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = moe.n_experts, moe.top_k
+    gate_vals, idx, aux = _route(p, xt, moe)
+    cap = _capacity(t, e, k, moe.capacity_factor)
+
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)
+    flat_onehot = onehot.reshape(t * k, e)
+    pos_in_expert = (jnp.cumsum(flat_onehot, axis=0) - flat_onehot).reshape(t, k, e)
+    pos = jnp.sum(pos_in_expert * onehot, axis=-1).astype(jnp.int32)
+    keep = pos < cap
+    gate_kept = gate_vals * keep
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32)
+    dispatch = jnp.einsum("tke,tkc->tec", onehot * keep[..., None], pos_oh)
+    combine = jnp.einsum("tke,tkc->tec", gate_kept[..., None] * onehot, pos_oh)
+    aux["dropped_fraction"] = 1.0 - jnp.sum(keep) / (t * k)
+
+    xin = jnp.einsum("tec,td->ecd", dispatch, xt.astype(jnp.float32)).astype(x.dtype)
+    xin = shard(xin, "expert", None, "embed")
+    act = activation_fn(cfg.activation)
+    up = jnp.einsum("ecd,edf->ecf", xin, p["up"])
+    if is_gated(cfg.activation):
+        up = act(jnp.einsum("ecd,edf->ecf", xin, p["gate"])) * up
+    else:
+        up = act(up)
+    out = jnp.einsum("ecf,efd->ecd", up, p["down"])
+    out = shard(out, "expert", None, "embed")
+    y = jnp.einsum("tec,ecd->td", combine, out.astype(jnp.float32)).astype(x.dtype)
+    return y.reshape(b, s, d), aux
+
+
+# ---------------------------------------------------------------------------
+
+
+def apply_moe(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B, S, d) -> (y, aux)."""
+    moe = cfg.moe
+    if moe.dispatch == "dense":
+        return _apply_moe_dense(p, x, cfg)
+    return _apply_moe_sort(p, x, cfg, moe.n_groups or 1)
+
+
+def moe_aux_loss(aux: Dict, cfg: ModelConfig) -> jnp.ndarray:
+    moe = cfg.moe
+    return (moe.load_balance_coef * aux["load_balance_loss"]
+            + moe.router_z_coef * aux["router_z_loss"])

@@ -1,0 +1,53 @@
+"""Logical-axis sharding annotations for model code.
+
+Model code annotates activations with *logical* axis names
+(``shard(x, "batch", "seq", "heads", None)``).  The launch layer installs a
+mapping from logical names to mesh axes via :func:`use_logical_rules`; outside
+any mapping the annotation is a no-op, so smoke tests on one CPU device run
+the exact same model code.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+AxisName = Union[str, Tuple[str, ...], None]
+
+
+def _rules() -> Optional[Dict[str, AxisName]]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_logical_rules(mesh: Mesh, rules: Dict[str, AxisName]):
+    """Install logical->mesh axis rules for the duration of a trace."""
+    prev = (_rules(), _mesh())
+    _state.rules, _state.mesh = dict(rules), mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev
+
+
+def logical_to_spec(*axes: Optional[str]) -> P:
+    rules = _rules() or {}
+    return P(*[rules.get(a) if a is not None else None for a in axes])
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Annotate ``x`` with logical axes; no-op without installed rules."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(*axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

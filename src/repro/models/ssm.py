@@ -1,0 +1,307 @@
+"""State-space sequence mixers: RWKV6 ("Finch") time-mix and a Mamba-style
+selective-SSM head bank (used by Hymba's hybrid layers).
+
+RWKV6 recurrence (per head, head dim ``n``):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t            (state: n x n)
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+with **data-dependent decay** w_t = exp(-exp(w0 + lora(x_t))) — the Finch
+contribution.  Prefill uses a chunkwise-parallel form (matmul-heavy, MXU
+friendly — the TPU adaptation of the paper-family CUDA kernels); a per-token
+``lax.scan`` recurrence serves as oracle and as the decode step.
+
+Mamba head (simplified mamba-1 used by Hymba):
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t ;  y_t = C_t . h_t + D x_t
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.models.sharding import shard
+
+
+# ===========================================================================
+# RWKV6
+# ===========================================================================
+
+
+class RWKVState(NamedTuple):
+    """Recurrent state for one rwkv layer."""
+
+    wkv: jnp.ndarray        # (B, H, n, n) matrix state
+    shift_tm: jnp.ndarray   # (B, d) previous token (time-mix token shift)
+    shift_cm: jnp.ndarray   # (B, d) previous token (channel-mix token shift)
+
+
+def rwkv_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    n = cfg.ssm.state_size                 # head dim (64 for rwkv6-3b)
+    h = cfg.d_model // n
+    return h, n
+
+
+def init_rwkv_time_mix(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    h, n = rwkv_dims(cfg)
+    ks = jax.random.split(key, 9)
+    lora = max(32, d // 32)
+    return {
+        "wr": dense_init(ks[0], d, d, dtype),
+        "wk": dense_init(ks[1], d, d, dtype),
+        "wv": dense_init(ks[2], d, d, dtype),
+        "wg": dense_init(ks[3], d, d, dtype),
+        "wo": dense_init(ks[4], d, d, dtype),
+        # token-shift interpolation weights per projection (r,k,v,g,w)
+        "mu": jnp.full((5, d), 0.5, dtype),
+        # data-dependent decay: w0 + (tanh(x A) B)
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "w_lora_a": dense_init(ks[5], d, lora, jnp.float32),
+        "w_lora_b": (jax.random.normal(ks[6], (lora, d)) * 0.01).astype(jnp.float32),
+        # per-channel bonus
+        "u": (jax.random.normal(ks[7], (d,)) * 0.1).astype(jnp.float32),
+        "ln_x_scale": jnp.ones((d,), jnp.float32),  # per-head group norm
+    }
+
+
+def _rwkv_projections(p: Dict, x: jnp.ndarray, x_prev: jnp.ndarray):
+    """Token-shifted projections. x: (B,T,d); x_prev: (B,T,d) shifted input."""
+    def lerp(i):
+        return x + (x_prev - x) * p["mu"][i]
+
+    r = lerp(0) @ p["wr"]
+    k = lerp(1) @ p["wk"]
+    v = lerp(2) @ p["wv"]
+    g = jax.nn.silu(lerp(3) @ p["wg"])
+    xw = lerp(4).astype(jnp.float32)
+    logw = -jnp.exp(p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"])  # (B,T,d) <= 0
+    return r, k, v, g, logw
+
+
+def _group_norm(x: jnp.ndarray, scale: jnp.ndarray, h: int, n: int) -> jnp.ndarray:
+    """Per-head RMS norm of the wkv output. x: (..., d)."""
+    shp = x.shape
+    xh = x.reshape(shp[:-1] + (h, n)).astype(jnp.float32)
+    xh = xh * jax.lax.rsqrt(jnp.mean(jnp.square(xh), -1, keepdims=True) + 1e-6)
+    return (xh.reshape(shp) * scale).astype(x.dtype)
+
+
+def rwkv_time_mix_recurrent(
+    p: Dict, x: jnp.ndarray, state: RWKVState, cfg: ModelConfig
+) -> Tuple[jnp.ndarray, RWKVState]:
+    """Oracle/decode path: per-token scan. x: (B,T,d)."""
+    b, t, d = x.shape
+    h, n = rwkv_dims(cfg)
+    x_prev_seq = jnp.concatenate(
+        [state.shift_tm[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    r, k, v, g, logw = _rwkv_projections(p, x, x_prev_seq)
+    rh = r.reshape(b, t, h, n).astype(jnp.float32)
+    kh = k.reshape(b, t, h, n).astype(jnp.float32)
+    vh = v.reshape(b, t, h, n).astype(jnp.float32)
+    wh = jnp.exp(logw.reshape(b, t, h, n))
+    u = p["u"].reshape(h, n)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                     # (B,H,n) each
+        kv = k_t[..., :, None] * v_t[..., None, :]   # (B,H,n,n)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * kv)
+        S_new = w_t[..., :, None] * S + kv
+        return S_new, y
+
+    xs = (jnp.moveaxis(rh, 1, 0), jnp.moveaxis(kh, 1, 0),
+          jnp.moveaxis(vh, 1, 0), jnp.moveaxis(wh, 1, 0))
+    S_fin, ys = jax.lax.scan(step, state.wkv, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, t, d)
+    y = _group_norm(y, p["ln_x_scale"], h, n) * g
+    out = y.astype(x.dtype) @ p["wo"]
+    new_state = RWKVState(S_fin, x[:, -1], state.shift_cm)
+    return out, new_state
+
+
+def rwkv_time_mix_chunked(
+    p: Dict, x: jnp.ndarray, state: RWKVState, cfg: ModelConfig, chunk: int = 64
+) -> Tuple[jnp.ndarray, RWKVState]:
+    """Chunkwise-parallel prefill: intra-chunk via masked matmuls, inter-chunk
+    via a scan carrying the (B,H,n,n) state."""
+    b, t, d = x.shape
+    h, n = rwkv_dims(cfg)
+    if t % chunk:
+        return rwkv_time_mix_recurrent(p, x, state, cfg)
+    nc = t // chunk
+    x_prev_seq = jnp.concatenate(
+        [state.shift_tm[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    r, k, v, g, logw = _rwkv_projections(p, x, x_prev_seq)
+    r = shard(r, "batch", "seq", "embed")
+    # (B, nc, L, H, n)
+    rh = r.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    kh = k.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    vh = v.reshape(b, nc, chunk, h, n).astype(jnp.float32)
+    lw = logw.reshape(b, nc, chunk, h, n)
+    u = p["u"].reshape(h, n)
+
+    # cumulative log-decay inside each chunk: cum[t] = sum_{u<=t} logw_u
+    cum = jnp.cumsum(lw, axis=2)                       # (B,nc,L,H,n)
+    total = cum[:, :, -1]                              # (B,nc,H,n)
+
+    # intra-chunk pairwise scores: score[t,s] = sum_i r_t k_s exp(cum[t-1]-cum[s])
+    # use factors r' = r * exp(cum_prev), k' = k * exp(-cum) (chunk-local, fp32)
+    cum_prev = cum - lw                                # exclusive cumsum
+    r_f = rh * jnp.exp(cum_prev)
+    k_f = kh * jnp.exp(-cum)
+    scores = jnp.einsum("bclhn,bcmhn->bchlm", r_f, k_f)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = scores * mask[None, None, None]
+    # diagonal bonus term: u * r_t k_t
+    diag = jnp.einsum("bclhn,bclhn->bchl", rh * u[None, None, None], kh)
+    y_intra = jnp.einsum("bchlm,bcmhn->bclhn", scores, vh)
+    y_intra = y_intra + diag.transpose(0, 1, 3, 2)[..., None] * vh  # (B,nc,L,H,n)
+
+    # chunk-boundary contributions: scan over chunks carrying S
+    k_state = kh * jnp.exp(total[:, :, None] - cum)    # decayed to chunk end
+
+    def cstep(S, inp):
+        r_fc, k_sc, v_c, tot_c = inp                   # (B,L,H,n)x3, (B,H,n)
+        y_c = jnp.einsum("blhi,bhij->blhj", r_fc, S)
+        S_new = jnp.exp(tot_c)[..., None] * S + jnp.einsum("blhi,blhj->bhij", k_sc, v_c)
+        return S_new, y_c
+
+    xs = (jnp.moveaxis(r_f, 1, 0), jnp.moveaxis(k_state, 1, 0),
+          jnp.moveaxis(vh, 1, 0), jnp.moveaxis(total, 1, 0))
+    S_fin, y_cross = jax.lax.scan(cstep, state.wkv, xs)
+    y = y_intra + jnp.moveaxis(y_cross, 0, 1).reshape(b, nc, chunk, h, n)
+    y = y.reshape(b, t, d)
+    y = _group_norm(y, p["ln_x_scale"], h, n) * g
+    out = y.astype(x.dtype) @ p["wo"]
+    return shard(out, "batch", "seq", "embed"), RWKVState(S_fin, x[:, -1], state.shift_cm)
+
+
+def init_rwkv_channel_mix(key, cfg: ModelConfig, dtype) -> Dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wk": dense_init(ks[0], d, f, dtype),
+        "wv": dense_init(ks[1], f, d, dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+        "mu": jnp.full((2, d), 0.5, dtype),
+    }
+
+
+def rwkv_channel_mix(p: Dict, x: jnp.ndarray, x_prev_last: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Squared-relu channel mix with token shift. Returns (out, new last x)."""
+    x_prev = jnp.concatenate(
+        [x_prev_last[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    xk = x + (x_prev - x) * p["mu"][0]
+    xr = x + (x_prev - x) * p["mu"][1]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1]
+
+
+def init_rwkv_state(cfg: ModelConfig, batch: int) -> RWKVState:
+    h, n = rwkv_dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return RWKVState(
+        wkv=jnp.zeros((batch, h, n, n), jnp.float32),
+        shift_tm=jnp.zeros((batch, cfg.d_model), dt),
+        shift_cm=jnp.zeros((batch, cfg.d_model), dt),
+    )
+
+
+# ===========================================================================
+# Mamba head bank (Hymba)
+# ===========================================================================
+
+
+class MambaState(NamedTuple):
+    h: jnp.ndarray       # (B, inner, state)
+    conv: jnp.ndarray    # (B, conv_width - 1, inner) rolling conv input buffer
+
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    inner = cfg.d_model
+    state = cfg.ssm.state_size
+    dt_rank = cfg.ssm.dt_rank or max(1, cfg.d_model // 16)
+    return inner, state, dt_rank
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    inner, state, dt_rank = mamba_dims(cfg)
+    cw = cfg.ssm.conv_width
+    ks = jax.random.split(key, 7)
+    return {
+        "in_x": dense_init(ks[0], d, inner, dtype),
+        "in_z": dense_init(ks[1], d, inner, dtype),
+        "conv": (jax.random.normal(ks[2], (cw, inner)) * 0.1).astype(dtype),
+        "x_proj": dense_init(ks[3], inner, dt_rank + 2 * state, dtype),
+        "dt_proj": dense_init(ks[4], dt_rank, inner, jnp.float32),
+        "dt_bias": jnp.full((inner,), -4.6, jnp.float32),   # softplus -> dt ~ 0.01
+        "log_a": jnp.log(jnp.arange(1, state + 1, dtype=jnp.float32))[None, :]
+                 * jnp.ones((inner, 1), jnp.float32),       # A = -exp(log_a)
+        "d_skip": jnp.ones((inner,), jnp.float32),
+        "out": dense_init(ks[5], inner, d, dtype),
+    }
+
+
+def _mamba_preproc(p: Dict, x: jnp.ndarray, conv_buf: jnp.ndarray, cfg: ModelConfig):
+    """Shared projection + causal conv. x: (B,T,d)."""
+    inner, state, dt_rank = mamba_dims(cfg)
+    cw = cfg.ssm.conv_width
+    xi = x @ p["in_x"]                                   # (B,T,inner)
+    z = jax.nn.silu(x @ p["in_z"])
+    # causal depthwise conv over time with carried buffer
+    xc = jnp.concatenate([conv_buf.astype(xi.dtype), xi], axis=1)  # (B, T+cw-1, inner)
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(cw)[None, :]
+    windows = xc[:, idx]                                 # (B,T,cw,inner)
+    xi = jax.nn.silu(jnp.einsum("btci,ci->bti", windows, p["conv"]))
+    new_buf = xc[:, -(cw - 1):] if cw > 1 else xc[:, :0]
+    proj = xi @ p["x_proj"]
+    dt_in, B, C = jnp.split(proj, [dt_rank, dt_rank + state], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) @ p["dt_proj"] + p["dt_bias"])
+    return xi, z, dt, B.astype(jnp.float32), C.astype(jnp.float32), new_buf
+
+
+def mamba_scan(p: Dict, x: jnp.ndarray, st: MambaState, cfg: ModelConfig,
+               impl: str = "xla") -> Tuple[jnp.ndarray, MambaState]:
+    """Selective scan over time. x: (B,T,d) -> (B,T,d).
+
+    impl="pallas" uses the VMEM-resident selective-scan kernel
+    (repro.kernels.mamba) — the TPU-native fix for the scan's HBM round-trips
+    (EXPERIMENTS.md §Perf pair A).
+    """
+    b, t, d = x.shape
+    xi, z, dt, B, C, new_buf = _mamba_preproc(p, x, st.conv, cfg)
+    A = -jnp.exp(p["log_a"])                             # (inner, state)
+
+    if impl == "pallas" and t > 1:
+        from repro.kernels.mamba.ops import selective_scan
+
+        y, h_fin = selective_scan(xi.astype(jnp.float32), dt, B, C, A, st.h,
+                                  impl="pallas")
+    else:
+        def step(h, inp):
+            xi_t, dt_t, B_t, C_t = inp                   # (B,inner),(B,inner),(B,state),(B,state)
+            da = jnp.exp(dt_t[..., None] * A)            # (B,inner,state)
+            h = da * h + (dt_t * xi_t)[..., None] * B_t[:, None, :]
+            y = jnp.einsum("bis,bs->bi", h, C_t)
+            return h, y
+
+        xs = (jnp.moveaxis(xi.astype(jnp.float32), 1, 0), jnp.moveaxis(dt, 1, 0),
+              jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+        unroll = min(cfg.ssm.scan_unroll, t) if t > 1 else 1
+        h_fin, ys = jax.lax.scan(step, st.h, xs, unroll=unroll)
+        y = jnp.moveaxis(ys, 0, 1)
+    y = y + p["d_skip"] * xi.astype(jnp.float32)
+    out = (y.astype(x.dtype) * z) @ p["out"]
+    return out, MambaState(h_fin, new_buf)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    inner, state, _ = mamba_dims(cfg)
+    cw = cfg.ssm.conv_width
+    return MambaState(
+        h=jnp.zeros((batch, inner, state), jnp.float32),
+        conv=jnp.zeros((batch, cw - 1, inner), jnp.dtype(cfg.dtype)),
+    )

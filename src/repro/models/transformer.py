@@ -1,0 +1,446 @@
+"""Unified model covering all assigned architecture families.
+
+One parameterized decoder (+optional encoder) built from:
+  dense / vlm      : GQA attention (+frontend embeds) + (Ge)GLU / relu2 FFN
+  moe              : GQA attention + top-k expert FFN
+  ssm (rwkv6)      : time-mix (data-dependent decay) + channel-mix
+  hybrid (hymba)   : parallel SWA-attention + Mamba heads, then FFN
+  audio (whisper)  : bidirectional encoder + causal decoder w/ cross-attention
+
+Layers are stacked (leading L axis on every param leaf) and iterated with
+``lax.scan`` so the HLO is O(1) in depth; ``cfg.remat`` wraps the body in
+``jax.checkpoint`` for training memory.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    embed_init,
+    init_mlp,
+    init_norm,
+    sinusoidal_at,
+    sinusoidal_positions,
+    softmax_xent,
+)
+from repro.models.sharding import shard
+
+Params = Dict[str, Any]
+
+
+class DecodeState(NamedTuple):
+    layers: Any                      # stacked per-layer cache pytree
+    step: jnp.ndarray                # (B,) int32: tokens processed per sequence
+    cross_kv: Optional[Any] = None   # whisper: stacked (k, v) from encoder
+
+
+# ===========================================================================
+# Init
+# ===========================================================================
+
+
+def _init_layer(key, cfg: ModelConfig, dtype, *, cross: bool) -> Params:
+    ks = jax.random.split(key, 8)
+    p: Params = {"norm1": init_norm(cfg.norm, cfg.d_model, jnp.float32),
+                 "norm2": init_norm(cfg.norm, cfg.d_model, jnp.float32)}
+    if cfg.attention == "none":  # rwkv
+        p["time_mix"] = ssm_lib.init_rwkv_time_mix(ks[0], cfg, dtype)
+        p["channel_mix"] = ssm_lib.init_rwkv_channel_mix(ks[1], cfg, dtype)
+        return p
+    p["attn"] = attn.init_attention(ks[0], cfg, dtype)
+    if cfg.attention == "hybrid":
+        p["mamba"] = ssm_lib.init_mamba(ks[1], cfg, dtype)
+    if cross:
+        p["cross_attn"] = attn.init_attention(ks[2], cfg, dtype, cross=True)
+        p["norm_cross"] = init_norm(cfg.norm, cfg.d_model, jnp.float32)
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.init_moe(ks[3], cfg, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[3], cfg.d_model, cfg.d_ff, cfg.activation, dtype)
+    return p
+
+
+def _stack_layers(key, n: int, cfg: ModelConfig, dtype, *, cross: bool) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_layer(k, cfg, dtype, cross=cross))(keys)
+
+
+def init_params(key, cfg: ModelConfig) -> Params:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.norm, cfg.d_model, jnp.float32),
+        "layers": _stack_layers(ks[1], cfg.n_layers, cfg, dtype, cross=cfg.enc_dec),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = embed_init(ks[2], cfg.vocab_size, cfg.d_model, dtype).T
+    if cfg.enc_dec:
+        p["encoder"] = {
+            "layers": _stack_layers(ks[3], cfg.n_enc_layers, cfg, dtype, cross=False),
+            "final_norm": init_norm(cfg.norm, cfg.d_model, jnp.float32),
+        }
+    if cfg.frontend is not None and cfg.frontend.embed_dim != cfg.d_model:
+        p["frontend_proj"] = embed_init(ks[4], cfg.frontend.embed_dim, cfg.d_model, dtype)
+    return p
+
+
+# ===========================================================================
+# Layer bodies (sequence / prefill form)
+# ===========================================================================
+
+
+def _seq_layer(cfg: ModelConfig, impl: str, causal: bool, x, lp,
+               enc_out=None):
+    """One layer over a full sequence. Returns (x, aux_losses)."""
+    aux = jnp.zeros((), jnp.float32)
+    window = cfg.window if cfg.attention in ("swa", "hybrid") else None
+    h = apply_norm(cfg.norm, lp["norm1"], x)
+    a_out, _ = attn.attention_prefill(lp["attn"], h, cfg, causal=causal,
+                                      window=window, impl=impl)
+    if cfg.attention == "hybrid":
+        st = ssm_lib.init_mamba_state(cfg, x.shape[0])
+        m_out, _ = ssm_lib.mamba_scan(lp["mamba"], h, st, cfg)
+        a_out = 0.5 * (a_out + m_out)
+    x = x + a_out
+    if enc_out is not None:
+        h = apply_norm(cfg.norm, lp["norm_cross"], x)
+        c_out, _ = attn.attention_prefill(lp["cross_attn"], h, cfg,
+                                          causal=False, kv_from=enc_out)
+        x = x + c_out
+    h = apply_norm(cfg.norm, lp["norm2"], x)
+    if cfg.moe is not None:
+        y, moe_aux = moe_lib.apply_moe(lp["moe"], h, cfg)
+        aux = aux + moe_lib.moe_aux_loss(moe_aux, cfg)
+    else:
+        y = apply_mlp(lp["mlp"], h, cfg.activation)
+    return x + y, aux
+
+
+def _run_stack(cfg: ModelConfig, impl: str, causal: bool, x, layers,
+               enc_out=None):
+    def body(carry, lp):
+        x, aux = carry
+        # residual-stream annotation: "act_seq" maps to the model axis under
+        # Megatron-style activation sequence sharding (launch-layer opt-in) —
+        # the remat-saved per-layer stack then shards over model too
+        x = shard(x, "batch", "act_seq", "embed")
+        x, a = _seq_layer(cfg, impl, causal, x, lp, enc_out=enc_out)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), layers)
+    return x, aux
+
+
+def _rwkv_seq_layer(cfg: ModelConfig, x, lp):
+    x = shard(x, "batch", "act_seq", "embed")
+    h = apply_norm(cfg.norm, lp["norm1"], x)
+    st = ssm_lib.init_rwkv_state(cfg, x.shape[0])
+    y, _ = ssm_lib.rwkv_time_mix_chunked(lp["time_mix"], h, st, cfg)
+    x = x + y
+    h = apply_norm(cfg.norm, lp["norm2"], x)
+    y, _last = ssm_lib.rwkv_channel_mix(lp["channel_mix"], h, jnp.zeros_like(h[:, 0]))
+    return x + y
+
+
+# ===========================================================================
+# Forward (training / prefill logits)
+# ===========================================================================
+
+
+def embed_tokens(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                 frontend_embeds: Optional[jnp.ndarray]) -> jnp.ndarray:
+    x = params["embed"][tokens]
+    if cfg.frontend is not None and not cfg.enc_dec:
+        fe = frontend_embeds
+        if "frontend_proj" in params:
+            fe = fe @ params["frontend_proj"]
+        x = jnp.concatenate([fe.astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            frontend_embeds: Optional[jnp.ndarray] = None,
+            impl: str = "naive") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence logits. tokens: (B, S_text). For VLM, frontend_embeds
+    (B, n_tok, fe_dim) are prepended. For whisper, frontend_embeds are the
+    encoder frames (B, enc_seq, d). Returns (logits, aux_loss)."""
+    enc_out = None
+    if cfg.enc_dec:
+        eo = frontend_embeds
+        if "frontend_proj" in params:
+            eo = eo @ params["frontend_proj"]
+        eo = eo + sinusoidal_positions(eo.shape[1], cfg.d_model)[None].astype(eo.dtype)
+        eo = shard(eo, "batch", "seq", "embed")
+        enc_out, enc_aux = _run_stack(cfg, impl, False, eo, params["encoder"]["layers"])
+        enc_out = apply_norm(cfg.norm, params["encoder"]["final_norm"], enc_out)
+    x = embed_tokens(params, cfg, tokens, frontend_embeds if not cfg.enc_dec else None)
+    if not cfg.use_rope and cfg.attention != "none":
+        # whisper-style sinusoidal positions (rwkv is position-free)
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    x = shard(x, "batch", "seq", "embed")
+    if cfg.attention == "none":
+        aux = jnp.zeros((), jnp.float32)
+
+        def body(carry, lp):
+            return _rwkv_seq_layer(cfg, carry, lp), None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+    else:
+        x, aux = _run_stack(cfg, impl, True, x, params["layers"], enc_out=enc_out)
+        if cfg.enc_dec:
+            aux = aux + enc_aux
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return shard(logits, "batch", "seq", "vocab"), aux
+
+
+def loss_fn(params: Params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray],
+            impl: str = "naive") -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Next-token LM loss. batch: tokens (B,S), labels (B,S), optional
+    frontend_embeds, loss_mask."""
+    logits, aux = forward(params, cfg, batch["tokens"],
+                          batch.get("frontend_embeds"), impl=impl)
+    labels = batch["labels"]
+    if cfg.frontend is not None and not cfg.enc_dec:
+        # loss only on text positions (after the frontend tokens)
+        n_front = cfg.frontend.n_tokens
+        logits = logits[:, n_front:]
+    xent = softmax_xent(logits, labels, batch.get("loss_mask"))
+    return xent + aux, {"xent": xent, "aux": aux}
+
+
+# ===========================================================================
+# Decode path
+# ===========================================================================
+
+
+def kv_cache_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.kv_cache_dtype or cfg.dtype)
+
+
+def _layer_cache_template(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict:
+    c: Dict[str, Any] = {}
+    if cfg.attention == "none":
+        c["rwkv"] = ssm_lib.init_rwkv_state(cfg, batch)
+        return c
+    cap = min(max_len, cfg.window) if (cfg.window and cfg.attention in ("swa", "hybrid")) else max_len
+    c["kv"] = attn.init_kv_cache(cfg, batch, cap, kv_cache_dtype(cfg))
+    if cfg.attention == "hybrid":
+        c["mamba"] = ssm_lib.init_mamba_state(cfg, batch)
+    return c
+
+
+def init_decode_state(params: Params, cfg: ModelConfig, batch: int,
+                      max_len: int,
+                      frontend_embeds: Optional[jnp.ndarray] = None,
+                      impl: str = "naive") -> DecodeState:
+    """Allocate per-layer caches (stacked over L). For whisper, also runs the
+    encoder and precomputes stacked cross-attention K/V."""
+    dtype = jnp.dtype(cfg.dtype)
+    tmpl = _layer_cache_template(cfg, batch, max_len, dtype)
+    stacked = jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), tmpl)
+    cross_kv = None
+    if cfg.enc_dec:
+        eo = frontend_embeds
+        if "frontend_proj" in params:
+            eo = eo @ params["frontend_proj"]
+        eo = eo + sinusoidal_positions(eo.shape[1], cfg.d_model)[None].astype(eo.dtype)
+        enc_out, _ = _run_stack(cfg, impl, False, eo, params["encoder"]["layers"])
+        enc_out = apply_norm(cfg.norm, params["encoder"]["final_norm"], enc_out)
+
+        def mk_cross(lp):
+            k = (enc_out @ lp["cross_attn"]["wk"]).reshape(
+                batch, -1, cfg.n_kv_heads, cfg.head_dim)
+            v = (enc_out @ lp["cross_attn"]["wv"]).reshape(
+                batch, -1, cfg.n_kv_heads, cfg.head_dim)
+            return k, v
+
+        cross_kv = jax.vmap(mk_cross)(params["layers"])
+    return DecodeState(stacked, jnp.zeros((batch,), jnp.int32), cross_kv)
+
+
+def _decode_layer(cfg: ModelConfig, x, lp, cache, cross_kv=None):
+    """One-token layer step. x: (B,1,d)."""
+    new_cache = dict(cache)
+    if cfg.attention == "none":
+        st: ssm_lib.RWKVState = cache["rwkv"]
+        h = apply_norm(cfg.norm, lp["norm1"], x)
+        y, st2 = ssm_lib.rwkv_time_mix_recurrent(lp["time_mix"], h, st, cfg)
+        x = x + y
+        h = apply_norm(cfg.norm, lp["norm2"], x)
+        y, last_cm = ssm_lib.rwkv_channel_mix(lp["channel_mix"], h, st.shift_cm)
+        new_cache["rwkv"] = ssm_lib.RWKVState(st2.wkv, st2.shift_tm, last_cm)
+        return x + y, new_cache
+
+    window = cfg.window if cfg.attention in ("swa", "hybrid") else None
+    h = apply_norm(cfg.norm, lp["norm1"], x)
+    a_out, kv2 = attn.attention_decode(lp["attn"], h, cache["kv"], cfg, window=window)
+    new_cache["kv"] = kv2
+    if cfg.attention == "hybrid":
+        m_out, m_st = ssm_lib.mamba_scan(lp["mamba"], h, cache["mamba"], cfg)
+        new_cache["mamba"] = m_st
+        a_out = 0.5 * (a_out + m_out)
+    x = x + a_out
+    if cross_kv is not None:
+        h = apply_norm(cfg.norm, lp["norm_cross"], x)
+        c_out, _ = attn.attention_decode(lp["cross_attn"], h, cache["kv"], cfg,
+                                         cross_kv=cross_kv)
+        x = x + c_out
+    h = apply_norm(cfg.norm, lp["norm2"], x)
+    if cfg.moe is not None:
+        y, _ = moe_lib.apply_moe(lp["moe"], h, cfg)
+    else:
+        y = apply_mlp(lp["mlp"], h, cfg.activation)
+    return x + y, new_cache
+
+
+def _kv_into_ring(k: jnp.ndarray, v: jnp.ndarray, cap: int, dtype) -> attn.KVCache:
+    """Pack prefilled K/V (B,S,KV,Dh) into a ring cache of capacity ``cap``."""
+    b, s, kvh, dh = k.shape
+    ck = jnp.zeros((b, cap, kvh, dh), dtype)
+    cv = jnp.zeros((b, cap, kvh, dh), dtype)
+    if s <= cap:
+        ck = ck.at[:, :s].set(k.astype(dtype))
+        cv = cv.at[:, :s].set(v.astype(dtype))
+    else:
+        slots = (jnp.arange(s - cap, s)) % cap          # unique slots
+        ck = ck.at[:, slots].set(k[:, -cap:].astype(dtype))
+        cv = cv.at[:, slots].set(v[:, -cap:].astype(dtype))
+    return attn.KVCache(ck, cv, jnp.full((b,), s, jnp.int32))
+
+
+def prefill(params: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+            frontend_embeds: Optional[jnp.ndarray] = None,
+            max_len: Optional[int] = None,
+            impl: str = "naive",
+            last_only: bool = False) -> Tuple[jnp.ndarray, DecodeState]:
+    """Run the full prompt, returning (logits, primed DecodeState).
+    ``last_only`` computes logits for the final position only (serving path —
+    avoids materializing the (B, S, V) tensor)."""
+    dtype = jnp.dtype(cfg.dtype)
+    enc_out = None
+    cross_kv = None
+    if cfg.enc_dec:
+        eo = frontend_embeds
+        if "frontend_proj" in params:
+            eo = eo @ params["frontend_proj"]
+        eo = eo + sinusoidal_positions(eo.shape[1], cfg.d_model)[None].astype(eo.dtype)
+        enc_out, _ = _run_stack(cfg, impl, False, eo, params["encoder"]["layers"])
+        enc_out = apply_norm(cfg.norm, params["encoder"]["final_norm"], enc_out)
+
+        def mk_cross(lp):
+            b = enc_out.shape[0]
+            k = (enc_out @ lp["cross_attn"]["wk"]).reshape(b, -1, cfg.n_kv_heads, cfg.head_dim)
+            v = (enc_out @ lp["cross_attn"]["wv"]).reshape(b, -1, cfg.n_kv_heads, cfg.head_dim)
+            return k, v
+
+        cross_kv = jax.vmap(mk_cross)(params["layers"])
+    x = embed_tokens(params, cfg, tokens, frontend_embeds if not cfg.enc_dec else None)
+    if not cfg.use_rope and cfg.attention != "none":
+        x = x + sinusoidal_positions(x.shape[1], cfg.d_model)[None].astype(x.dtype)
+    s_total = x.shape[1]
+    max_len = max_len or s_total
+    cap_full = max(max_len, s_total)
+    window = cfg.window if cfg.attention in ("swa", "hybrid") else None
+    cap = min(cap_full, window) if window else cap_full
+
+    def body(carry, xs):
+        x = carry
+        if cross_kv is not None:
+            lp, ckv = xs
+        else:
+            lp, ckv = xs, None
+        cache: Dict[str, Any] = {}
+        if cfg.attention == "none":
+            h = apply_norm(cfg.norm, lp["norm1"], x)
+            st0 = ssm_lib.init_rwkv_state(cfg, x.shape[0])
+            y, st1 = ssm_lib.rwkv_time_mix_chunked(lp["time_mix"], h, st0, cfg)
+            x = x + y
+            h2 = apply_norm(cfg.norm, lp["norm2"], x)
+            y2, last_cm = ssm_lib.rwkv_channel_mix(lp["channel_mix"], h2,
+                                                   jnp.zeros_like(h2[:, 0]))
+            cache["rwkv"] = ssm_lib.RWKVState(st1.wkv, st1.shift_tm, last_cm)
+            return x + y2, cache
+        h = apply_norm(cfg.norm, lp["norm1"], x)
+        a_out, (k, v) = attn.attention_prefill(lp["attn"], h, cfg, causal=True,
+                                               window=window, impl=impl)
+        cache["kv"] = _kv_into_ring(k, v, cap, kv_cache_dtype(cfg))
+        if cfg.attention == "hybrid":
+            m0 = ssm_lib.init_mamba_state(cfg, x.shape[0])
+            m_out, m_st = ssm_lib.mamba_scan(lp["mamba"], h, m0, cfg)
+            cache["mamba"] = m_st
+            a_out = 0.5 * (a_out + m_out)
+        x = x + a_out
+        if ckv is not None:
+            h = apply_norm(cfg.norm, lp["norm_cross"], x)
+            c_out, _ = attn.attention_prefill(lp["cross_attn"], h, cfg,
+                                              causal=False, kv_from=enc_out)
+            x = x + c_out
+        h = apply_norm(cfg.norm, lp["norm2"], x)
+        if cfg.moe is not None:
+            y, _ = moe_lib.apply_moe(lp["moe"], h, cfg)
+        else:
+            y = apply_mlp(lp["mlp"], h, cfg.activation)
+        return x + y, cache
+
+    xs = (params["layers"], cross_kv) if cross_kv is not None else params["layers"]
+    x, caches = jax.lax.scan(body, x, xs)
+    if last_only:
+        x = x[:, -1:]
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, DecodeState(caches, jnp.full((tokens.shape[0],), s_total,
+                                                jnp.int32), cross_kv)
+
+
+def decode_step(params: Params, cfg: ModelConfig, state: DecodeState,
+                token: jnp.ndarray) -> Tuple[jnp.ndarray, DecodeState]:
+    """token: (B,) int32 -> (logits (B, V), new state)."""
+    x = params["embed"][token][:, None, :]                     # (B,1,d)
+    if not cfg.use_rope and cfg.attention != "none":
+        pos_emb = jax.vmap(sinusoidal_at, (0, None))(state.step, cfg.d_model)
+        x = x + pos_emb[:, None].astype(x.dtype)
+    x = shard(x, "batch", None, "embed")
+
+    def body(carry, xs):
+        x = carry
+        if state.cross_kv is not None:
+            lp, cache, ckv = xs
+        else:
+            (lp, cache), ckv = xs, None
+        x, new_cache = _decode_layer(cfg, x, lp, cache, cross_kv=ckv)
+        return x, new_cache
+
+    xs = (params["layers"], state.layers)
+    if state.cross_kv is not None:
+        xs = (params["layers"], state.layers, state.cross_kv)
+    x, new_layers = jax.lax.scan(body, x, xs)
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head)[:, 0]
+    if cfg.logit_softcap:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return shard(logits, "batch", "vocab"), DecodeState(
+        new_layers, state.step + 1, state.cross_kv)

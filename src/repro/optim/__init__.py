@@ -1,0 +1,21 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    OptState,
+    adamw,
+    clip_by_global_norm,
+    global_norm,
+    sgd,
+)
+from repro.optim.schedules import constant_schedule, cosine_schedule, linear_warmup_cosine
+
+__all__ = [
+    "Optimizer",
+    "OptState",
+    "adamw",
+    "sgd",
+    "global_norm",
+    "clip_by_global_norm",
+    "constant_schedule",
+    "cosine_schedule",
+    "linear_warmup_cosine",
+]

@@ -1,0 +1,129 @@
+"""Pytree optimizers in raw JAX (optax is not available offline).
+
+An :class:`Optimizer` is a pair of pure functions (init, update) closed over
+hyperparameters; state lives in a pytree mirroring the params, so the whole
+thing shards transparently under pjit (optimizer state inherits the param
+sharding unless the launch layer overrides it — e.g. ZeRO over ``data``).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+OptState = Dict[str, Any]
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Params], OptState]
+    update: Callable[[Params, Params, OptState], Tuple[Params, OptState]]
+    # update(grads, params, state) -> (new_params, new_state)
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> Tuple[Params, jnp.ndarray]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), norm
+
+
+def _as_schedule(lr: Union[float, Schedule]) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def adamw(
+    lr: Union[float, Schedule],
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    grad_clip: Optional[float] = 1.0,
+    master_dtype=jnp.float32,
+) -> Optimizer:
+    """AdamW with fp32 master moments (params may be bf16)."""
+    sched = _as_schedule(lr)
+
+    def init(params: Params) -> OptState:
+        zeros = lambda p: jnp.zeros(p.shape, master_dtype)
+        return {
+            "mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads: Params, params: Params, state: OptState):
+        if grad_clip is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        step = state["step"] + 1
+        lr_t = sched(step)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, p, mu, nu):
+            g = g.astype(master_dtype)
+            mu2 = b1 * mu + (1 - b1) * g
+            nu2 = b2 * nu + (1 - b2) * jnp.square(g)
+            mhat = mu2 / bc1
+            nhat = nu2 / bc2
+            delta = mhat / (jnp.sqrt(nhat) + eps)
+            if weight_decay:
+                delta = delta + weight_decay * p.astype(master_dtype)
+            p2 = p.astype(master_dtype) - lr_t * delta
+            return p2.astype(p.dtype), mu2, nu2
+
+        flat = jax.tree.map(upd, grads, params, state["mu"], state["nu"])
+        new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+        new_mu = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+        new_nu = jax.tree.map(lambda t: t[2], flat, is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"mu": new_mu, "nu": new_nu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def sgd(
+    lr: Union[float, Schedule],
+    *,
+    momentum: float = 0.0,
+    nesterov: bool = False,
+    grad_clip: Optional[float] = None,
+) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params: Params) -> OptState:
+        st: OptState = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["mom"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return st
+
+    def update(grads: Params, params: Params, state: OptState):
+        if grad_clip is not None:
+            grads, _ = clip_by_global_norm(grads, grad_clip)
+        step = state["step"] + 1
+        lr_t = sched(step)
+        if momentum:
+            def upd(g, p, m):
+                g = g.astype(jnp.float32)
+                m2 = momentum * m + g
+                d = g + momentum * m2 if nesterov else m2
+                return (p.astype(jnp.float32) - lr_t * d).astype(p.dtype), m2
+
+            flat = jax.tree.map(upd, grads, params, state["mom"])
+            new_params = jax.tree.map(lambda t: t[0], flat, is_leaf=lambda t: isinstance(t, tuple))
+            new_mom = jax.tree.map(lambda t: t[1], flat, is_leaf=lambda t: isinstance(t, tuple))
+            return new_params, {"step": step, "mom": new_mom}
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32) - lr_t * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_params, {"step": step}
+
+    return Optimizer(init, update)

@@ -1,0 +1,34 @@
+import os
+import sys
+
+# make src importable without install
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+import pytest
+
+# Smoke tests and benches must see the single real CPU device (the dry-run
+# sets its own 512-device flag in its own process).
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def fl_data():
+    from repro.data import FederatedData, dirichlet_partition, make_classification_data
+
+    train, test = make_classification_data(n_samples=4000, seed=0)
+    parts = dirichlet_partition(train.y, 20, sigma=0.1, seed=0)
+    return FederatedData(train, test, parts)
+
+
+@pytest.fixture(scope="session")
+def mlp_task():
+    from repro.fl import MLPTask
+
+    return MLPTask(dim=32, hidden=32, n_classes=10)

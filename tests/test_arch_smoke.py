@@ -1,0 +1,97 @@
+"""Per-architecture smoke tests (assignment deliverable f).
+
+Each assigned architecture instantiates its REDUCED same-family variant
+(2 layers, d_model<=512, <=4 experts) and runs one forward + one train step
+on CPU, asserting output shapes and absence of NaNs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_model_config, list_archs
+from repro.models import transformer as T
+from repro.optim import sgd
+
+ARCHS = list_archs()
+
+
+def _batch(cfg, key, b=2, s=16):
+    tok = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {"tokens": tok, "labels": tok}
+    if cfg.frontend is not None:
+        batch["frontend_embeds"] = jax.random.normal(
+            key, (b, cfg.frontend.n_tokens, cfg.frontend.embed_dim),
+            dtype=jnp.dtype(cfg.dtype))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_config_invariants(arch):
+    cfg = get_model_config(arch, smoke=True)
+    full = get_model_config(arch)
+    assert cfg.n_layers == 2
+    assert cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.n_experts <= 4
+    assert cfg.family == full.family
+    assert cfg.attention == full.attention
+    assert (cfg.moe is None) == (full.moe is None)
+    assert (cfg.ssm is None) == (full.ssm is None)
+    assert cfg.enc_dec == full.enc_dec
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_no_nans(arch):
+    cfg = get_model_config(arch, smoke=True)
+    key = jax.random.PRNGKey(0)
+    params = T.init_params(key, cfg)
+    batch = _batch(cfg, key)
+    logits, aux = T.forward(params, cfg, batch["tokens"],
+                            batch.get("frontend_embeds"))
+    b, s = batch["tokens"].shape
+    exp_s = s + (cfg.frontend.n_tokens if cfg.frontend and not cfg.enc_dec else 0)
+    assert logits.shape == (b, exp_s, cfg.vocab_size)
+    assert not jnp.isnan(logits).any()
+    assert not jnp.isnan(aux)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = get_model_config(arch, smoke=True)
+    key = jax.random.PRNGKey(1)
+    params = T.init_params(key, cfg)
+    opt = sgd(0.05, momentum=0.9, grad_clip=1.0)
+    opt_state = opt.init(params)
+    batch = _batch(cfg, key)
+
+    def loss_fn(p):
+        l, m = T.loss_fn(p, cfg, batch)
+        return l, m
+
+    (loss0, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    assert np.isfinite(float(loss0))
+    new_params, _ = opt.update(grads, params, opt_state)
+    for a, b_ in zip(jax.tree.leaves(new_params), jax.tree.leaves(params)):
+        assert a.shape == b_.shape
+        assert not jnp.isnan(a).any()
+    (loss1, _), _ = jax.value_and_grad(loss_fn, has_aux=True)(new_params)
+    assert np.isfinite(float(loss1))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_one_token(arch):
+    cfg = get_model_config(arch, smoke=True)
+    key = jax.random.PRNGKey(2)
+    params = T.init_params(key, cfg)
+    b = 2
+    fe = None
+    if cfg.frontend is not None:
+        fe = jax.random.normal(key, (b, cfg.frontend.n_tokens,
+                                     cfg.frontend.embed_dim))
+    state = T.init_decode_state(params, cfg, b, 32, frontend_embeds=fe)
+    tok = jnp.zeros((b,), jnp.int32)
+    logits, state2 = T.decode_step(params, cfg, state, tok)
+    assert logits.shape == (b, cfg.vocab_size)
+    assert not jnp.isnan(logits).any()
+    assert (np.asarray(state2.step) == 1).all()

@@ -1,0 +1,124 @@
+"""FedRank core unit/property tests: features, ranking losses, rewards,
+experts, Q-net."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    apply_qnet,
+    featurize,
+    init_qnet,
+    pairwise_bce,
+    pairwise_bce_hard,
+    pairwise_soft_targets,
+    ranking_accuracy,
+    topk_overlap,
+)
+from repro.core.experts import expert_scores, EXPERTS
+from repro.fl.server import paper_reward
+
+
+def _states(rng, n=24):
+    return np.stack([
+        rng.lognormal(3, 1, n), rng.lognormal(2, 1, n),
+        rng.lognormal(1, 1, n), rng.lognormal(0, 1, n),
+        rng.uniform(0.1, 3, n), rng.lognormal(5, 1, n)], axis=1)
+
+
+def test_featurize_is_cohort_normalized():
+    rng = np.random.default_rng(0)
+    f = featurize(_states(rng))
+    np.testing.assert_allclose(f.mean(0), 0.0, atol=1e-5)
+    np.testing.assert_allclose(f.std(0), 1.0, atol=1e-2)
+
+
+def test_featurize_scale_invariant_ranking():
+    """Scaling all latencies by a constant must not change the feature
+    ordering (log + z-score)."""
+    rng = np.random.default_rng(1)
+    s = _states(rng)
+    f1 = featurize(s)
+    s2 = s.copy()
+    s2[:, 0] *= 1000.0
+    f2 = featurize(s2)
+    assert (np.argsort(f1[:, 0]) == np.argsort(f2[:, 0])).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(3, 40), seed=st.integers(0, 50))
+def test_pairwise_bce_minimized_by_matching_order(n, seed):
+    rng = np.random.default_rng(seed)
+    t = jnp.asarray(rng.normal(size=n), jnp.float32)
+    m = jnp.ones(n, jnp.float32)
+    tgt = pairwise_soft_targets(t)
+    good = float(pairwise_bce(t, tgt, m))
+    bad = float(pairwise_bce(-t, tgt, m))
+    assert good < bad
+
+
+def test_pairwise_bce_hard_ties_handled():
+    s = jnp.asarray([1.0, 2.0, 3.0])
+    t = jnp.asarray([0.0, 0.0, 0.0])  # all tied -> targets 0.5
+    m = jnp.ones(3)
+    l = float(pairwise_bce_hard(s, t, m))
+    assert np.isfinite(l)
+
+
+def test_ranking_accuracy_and_topk():
+    t = jnp.asarray([3.0, 2.0, 1.0, 0.0])
+    m = jnp.ones(4)
+    assert float(ranking_accuracy(t, t, m)) == 1.0
+    assert float(ranking_accuracy(-t, t, m)) == 0.0
+    assert float(topk_overlap(t, t, 2, m)) == 1.0
+
+
+def test_paper_reward_eq1():
+    # within budget: no penalty
+    assert paper_reward(0.1, 10.0, 5.0, 20.0, 10.0, 2.0, 2.0) == pytest.approx(0.1)
+    # latency over budget: (T/R_T)^alpha
+    r = paper_reward(0.1, 40.0, 5.0, 20.0, 10.0, 2.0, 2.0)
+    assert r == pytest.approx(0.1 * (20.0 / 40.0) ** 2)
+    # both over
+    r2 = paper_reward(0.1, 40.0, 20.0, 20.0, 10.0, 2.0, 1.0)
+    assert r2 == pytest.approx(0.1 * 0.25 * 0.5)
+
+
+@pytest.mark.parametrize("name", sorted(EXPERTS))
+def test_experts_produce_finite_scores(name):
+    rng = np.random.default_rng(3)
+    s = _states(rng)
+    u = expert_scores(name, s, l_ep=5)
+    assert u.shape == (len(s),)
+    assert np.isfinite(u).all()
+
+
+def test_oort_penalizes_stragglers():
+    rng = np.random.default_rng(4)
+    s = _states(rng, 10)
+    s[:, 4] = 1.0   # equal loss
+    s[:, 5] = 100.0  # equal data
+    s[0, 0] = 1e5   # straggler: huge per-epoch time
+    u = expert_scores("oort", s, l_ep=5)
+    assert u[0] < np.median(u)
+
+
+def test_featurize_jnp_matches_numpy():
+    from repro.core.features import featurize_jnp
+
+    rng = np.random.default_rng(7)
+    s = _states(rng, 16)
+    f_np = featurize(s)
+    f_j = np.asarray(featurize_jnp(jnp.asarray(s), jnp.ones(16)))
+    np.testing.assert_allclose(f_np, f_j, atol=1e-4)
+
+
+def test_qnet_shapes_and_determinism():
+    q = init_qnet(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(5)
+    f = jnp.asarray(featurize(_states(rng)))
+    s1 = apply_qnet(q, f)
+    s2 = apply_qnet(q, f)
+    assert s1.shape == (24,)
+    np.testing.assert_array_equal(s1, s2)

@@ -1,0 +1,202 @@
+"""FL substrate tests: simulator, partitioning, client training, aggregation,
+server integration."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import dirichlet_partition, iid_partition, make_classification_data
+from repro.fl import DevicePool, FLConfig, FLServer, MLPTask
+from repro.fl.aggregation import fedavg
+from repro.fl.client import local_train, probing_epoch
+from repro.fl.simulation import round_energy, round_latency
+
+
+# ---------------------------------------------------------------------------
+# partitioning
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(sigma=st.sampled_from([0.01, 0.1, 1.0, 100.0]), seed=st.integers(0, 20))
+def test_dirichlet_partition_covers_all(sigma, seed):
+    labels = np.random.default_rng(seed).integers(0, 10, size=2000)
+    parts = dirichlet_partition(labels, 10, sigma, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(np.unique(allidx)) == len(allidx)  # disjoint
+    assert all(len(p) >= 8 for p in parts)
+
+
+def test_dirichlet_smaller_sigma_more_skew():
+    labels = np.random.default_rng(0).integers(0, 10, size=20000)
+
+    def skew(sigma):
+        parts = dirichlet_partition(labels, 20, sigma, seed=1)
+        ents = []
+        for p in parts:
+            h = np.bincount(labels[p], minlength=10) / len(p)
+            h = h[h > 0]
+            ents.append(-(h * np.log(h)).sum())
+        return np.mean(ents)
+
+    assert skew(0.01) < skew(100.0)  # low sigma => low label entropy
+
+
+def test_iid_partition_size_skew():
+    parts = iid_partition(10000, 20, seed=0, size_skew=1.0)
+    sizes = np.array([len(p) for p in parts])
+    assert sizes.std() / sizes.mean() > 0.3
+
+
+# ---------------------------------------------------------------------------
+# device simulator
+# ---------------------------------------------------------------------------
+
+
+def test_device_pool_heterogeneity_and_dynamics():
+    pool = DevicePool(50, seed=0)
+    speeds = np.array([d.speed for d in pool.devices])
+    assert speeds.max() / speeds.min() > 5.0
+    l0 = pool.loads().copy()
+    changed = False
+    for _ in range(10):
+        pool.advance_round()
+        if not np.array_equal(pool.loads(), l0):
+            changed = True
+    assert changed
+
+
+def test_round_cost_formulas():
+    pool = DevicePool(10, seed=1)
+    fpe = np.full(10, 1e9)
+    st_ = pool.system_state(fpe, 1e6)
+    probe = np.arange(6)
+    sel = np.array([0, 1])
+    l_ep = 5
+    r_t = round_latency(st_, probe, sel, l_ep)
+    expect = st_.t_comp[probe].max() + (
+        st_.t_comm[sel] + st_.t_comp[sel] * (l_ep - 1)).max()
+    assert r_t == pytest.approx(expect)
+    r_e = round_energy(st_, probe, sel, l_ep)
+    expect_e = st_.e_comp[probe].sum() + (
+        st_.e_comm[sel] + st_.e_comp[sel] * (l_ep - 1)).sum()
+    assert r_e == pytest.approx(expect_e)
+
+
+# ---------------------------------------------------------------------------
+# client / aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_local_train_reduces_loss(mlp_task, fl_data):
+    key = jax.random.PRNGKey(0)
+    params = mlp_task.init(key)
+    idx = fl_data.client_indices[0]
+    x, y = fl_data.train.x[idx], fl_data.train.y[idx]
+    _, losses = local_train(mlp_task, params, x, y, epochs=5, lr=0.1)
+    assert losses[-1] < losses[0]
+
+
+def test_probing_epoch_is_one_epoch(mlp_task, fl_data):
+    key = jax.random.PRNGKey(0)
+    params = mlp_task.init(key)
+    idx = fl_data.client_indices[1]
+    x, y = fl_data.train.x[idx], fl_data.train.y[idx]
+    p1, l1 = probing_epoch(mlp_task, params, x, y, lr=0.1, seed=3)
+    _, ls = local_train(mlp_task, params, x, y, epochs=1, lr=0.1, seed=3)
+    assert l1 == pytest.approx(float(ls[0]))
+
+
+def test_fedprox_term_shrinks_updates(mlp_task, fl_data):
+    key = jax.random.PRNGKey(0)
+    params = mlp_task.init(key)
+    idx = fl_data.client_indices[2]
+    x, y = fl_data.train.x[idx], fl_data.train.y[idx]
+    p_plain, _ = local_train(mlp_task, params, x, y, epochs=3, lr=0.1, seed=5)
+    p_prox, _ = local_train(mlp_task, params, x, y, epochs=3, lr=0.1,
+                            prox_mu=10.0, seed=5)
+    d_plain = sum(float(jnp.sum(jnp.square(a - b)))
+                  for a, b in zip(jax.tree.leaves(p_plain), jax.tree.leaves(params)))
+    d_prox = sum(float(jnp.sum(jnp.square(a - b)))
+                 for a, b in zip(jax.tree.leaves(p_prox), jax.tree.leaves(params)))
+    assert d_prox < d_plain
+
+
+def test_fedavg_weighted_mean():
+    p1 = {"w": jnp.ones((2, 2))}
+    p2 = {"w": jnp.zeros((2, 2))}
+    avg = fedavg([p1, p2], [3.0, 1.0])
+    np.testing.assert_allclose(avg["w"], 0.75)
+
+
+# ---------------------------------------------------------------------------
+# server integration
+# ---------------------------------------------------------------------------
+
+
+def test_server_rounds_improve_accuracy(mlp_task, fl_data):
+    from repro.core import RandomPolicy
+
+    cfg = FLConfig(n_devices=20, k_select=4, rounds=6, l_ep=2, lr=0.1, seed=0)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    hist = srv.run(RandomPolicy())
+    assert hist[-1].acc > hist[0].acc
+    assert all(r.r_t > 0 and r.r_e > 0 for r in hist)
+    assert hist[-1].cum_time == pytest.approx(sum(r.r_t for r in hist))
+
+
+def test_lm_task_fl_round(fl_data):
+    """An assigned architecture (reduced) as the FL global model: one round
+    end to end with the LM task (2-D labels through the client path)."""
+    import jax
+    from repro.core import RandomPolicy
+    from repro.data.synthetic import SyntheticClassificationDataset, make_lm_stream
+    from repro.data.loader import FederatedData
+    from repro.configs import get_model_config
+    from repro.fl.tasks import LMTask
+
+    cfg = get_model_config("yi-6b", smoke=True)
+    seq = 16
+    stream = make_lm_stream(n_tokens=4000, vocab=cfg.vocab_size, seed=0)
+    n_seq = len(stream) // (seq + 1)
+    x = np.stack([stream[i * (seq + 1):(i + 1) * (seq + 1) - 1] for i in range(n_seq)])
+    y = np.stack([stream[i * (seq + 1) + 1:(i + 1) * (seq + 1)] for i in range(n_seq)])
+    train = SyntheticClassificationDataset(x, y[:, 0], 10)
+    train.x, train.y = x, y
+    test = SyntheticClassificationDataset(x[:32], y[:32, 0], 10)
+    test.x, test.y = x[:32], y[:32]
+    parts = [np.arange(i, n_seq, 8) for i in range(8)]
+    data = FederatedData(train, test, parts)
+    task = LMTask(cfg, seq_len=seq)
+    cfg_fl = FLConfig(n_devices=8, k_select=2, rounds=1, l_ep=1, lr=0.3, seed=0)
+    srv = FLServer(cfg_fl, task, data)
+    hist = srv.run(RandomPolicy())
+    assert len(hist) == 1
+    assert np.isfinite(hist[0].test_loss)
+    assert hist[0].r_t > 0
+
+
+def test_failure_injection_drops_updates(mlp_task, fl_data):
+    from repro.core import RandomPolicy
+
+    cfg = FLConfig(n_devices=20, k_select=5, rounds=5, l_ep=2, lr=0.1,
+                   seed=3, failure_rate=0.5)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    hist = srv.run(RandomPolicy())
+    total_failed = sum(len(r.failed) for r in hist)
+    assert total_failed > 0
+    for r in hist:
+        assert set(r.failed.tolist()).issubset(set(r.selected.tolist()))
+        assert r.r_t > 0  # cost of failed devices is still sunk
+
+
+def test_probing_policy_costs_include_probe_set(mlp_task, fl_data):
+    from repro.core import FedMarlPolicy
+
+    cfg = FLConfig(n_devices=20, k_select=4, rounds=2, l_ep=3, lr=0.1, seed=1)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    hist = srv.run(FedMarlPolicy())
+    for r in hist:
+        assert len(r.probe_set) >= cfg.k_select
+        assert set(r.selected).issubset(set(r.probe_set.tolist()))

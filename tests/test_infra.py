@@ -1,0 +1,190 @@
+"""Infrastructure tests: optimizers, schedules, checkpointing, HLO cost
+parser, sharding rules."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_checkpoint, load_pytree, save_pytree
+from repro.launch.hlo_cost import analyze_hlo_text, shape_bytes
+from repro.optim import adamw, clip_by_global_norm, cosine_schedule, \
+    linear_warmup_cosine, sgd
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+def _quad_min(opt, steps=300):
+    target = jnp.asarray([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum(jnp.square(p["w"] - target))
+
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        params, state = opt.update(g, params, state)
+    return float(loss(params))
+
+
+def test_adamw_converges_quadratic():
+    assert _quad_min(adamw(0.05, weight_decay=0.0)) < 1e-3
+
+
+def test_sgd_momentum_converges_quadratic():
+    assert _quad_min(sgd(0.05, momentum=0.9)) < 1e-3
+
+
+def test_grad_clip():
+    tree = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(10 * 100.0 ** 2))
+    cn = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    assert cn == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedules_shapes():
+    s = linear_warmup_cosine(1.0, 10, 100)
+    assert float(s(jnp.asarray(0))) <= 0.1
+    assert float(s(jnp.asarray(10))) == pytest.approx(1.0)
+    assert float(s(jnp.asarray(100))) < 0.5
+    c = cosine_schedule(1.0, 100)
+    assert float(c(jnp.asarray(100))) == pytest.approx(0.1, abs=1e-6)
+
+
+def test_adamw_bf16_params_fp32_master():
+    opt = adamw(0.01)
+    params = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = opt.init(params)
+    assert st["mu"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    p2, st2 = opt.update(g, params, st)
+    assert p2["w"].dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip():
+    tree = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": {"c": jnp.ones((2,), jnp.bfloat16), "d": 3, "e": "hi"},
+        "t": (np.zeros(2), 1.5),
+    }
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "step_5.ckpt")
+        save_pytree(tree, path)
+        back = load_pytree(path)
+        np.testing.assert_array_equal(back["a"], tree["a"])
+        assert back["b"]["d"] == 3 and back["b"]["e"] == "hi"
+        assert back["b"]["c"].dtype == np.dtype("bfloat16") or \
+            str(back["b"]["c"].dtype) == "bfloat16"
+        assert isinstance(back["t"], tuple)
+        assert latest_checkpoint(d) == path
+
+
+# ---------------------------------------------------------------------------
+# HLO cost parser
+# ---------------------------------------------------------------------------
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,4]{1,0}") == 128
+    assert shape_bytes("bf16[10]") == 20
+    assert shape_bytes("(f32[2], s32[3])") == 8 + 12
+    assert shape_bytes("pred[7]") == 7
+
+
+def test_scan_trip_count_correction():
+    def body(c, x):
+        return c, x @ x
+
+    def f(xs):
+        _, ys = jax.lax.scan(body, 0.0, xs)
+        return ys.sum()
+
+    xs = jax.ShapeDtypeStruct((8, 64, 64), jnp.float32)
+    txt = jax.jit(f).lower(xs).compile().as_text()
+    cost = analyze_hlo_text(txt)
+    expected = 8 * 2 * 64 ** 3
+    assert abs(cost.flops - expected) / expected < 0.05
+    assert cost.unknown_trip_whiles == 0
+
+
+def test_nested_scan_flops():
+    def inner(c, x):
+        return c + x @ x, None
+
+    def outer(c, xs):
+        c2, _ = jax.lax.scan(inner, c, xs)
+        return c2, None
+
+    def f(xs):
+        c, _ = jax.lax.scan(outer, jnp.zeros((32, 32)), xs)
+        return c.sum()
+
+    xs = jax.ShapeDtypeStruct((4, 5, 32, 32), jnp.float32)
+    txt = jax.jit(f).lower(xs).compile().as_text()
+    cost = analyze_hlo_text(txt)
+    expected = 4 * 5 * 2 * 32 ** 3
+    assert abs(cost.flops - expected) / expected < 0.1
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+
+def test_sharding_rules_divisibility_gating():
+    from repro.configs import get_model_config, get_shape
+    from repro.launch.sharding import build_rules
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+
+    mesh = FakeMesh()
+    shape = get_shape("train_4k")
+    # minitron: 24 q heads, not divisible by 16 -> heads unsharded
+    r = build_rules(get_model_config("minitron-4b"), mesh, shape)
+    assert r["heads"] is None
+    # yi: 32 heads divisible; 4 kv heads not
+    r = build_rules(get_model_config("yi-6b"), mesh, shape)
+    assert r["heads"] == "model"
+    assert r["kv_heads"] is None
+    # whisper vocab 51865 odd -> unsharded
+    r = build_rules(get_model_config("whisper-medium"), mesh, shape)
+    assert r["vocab"] is None
+    # moe: experts take the model axis, ff stays local
+    r = build_rules(get_model_config("olmoe-1b-7b"), mesh, shape)
+    assert r["expert"] == "model"
+    assert r["ff"] is None
+
+
+def test_param_specs_no_duplicate_axes():
+    from repro.configs import get_model_config
+    from repro.launch import steps as steps_lib
+    from repro.launch.sharding import param_specs
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((16, 16))
+
+    for arch in ("yi-6b", "olmoe-1b-7b", "rwkv6-3b", "hymba-1.5b",
+                 "whisper-medium"):
+        cfg = get_model_config(arch)
+        ps = steps_lib.params_struct(cfg)
+        specs = param_specs(cfg, ps, FakeMesh(), "train")
+        for spec in jax.tree.leaves(
+                specs, is_leaf=lambda x: hasattr(x, "_normalized_spec_for_aval")
+                or type(x).__name__ == "PartitionSpec"):
+            flat = [a for a in spec if a is not None]
+            assert len(flat) == len(set(flat)), (arch, spec)

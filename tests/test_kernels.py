@@ -1,0 +1,177 @@
+"""Per-kernel allclose validation against the pure-jnp oracles, swept over
+shapes and dtypes (interpret mode on CPU; the kernels target TPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.pairwise_rank.kernel import pairwise_rank_pallas
+from repro.kernels.pairwise_rank.ops import pairwise_rank_loss
+from repro.kernels.pairwise_rank.ref import pairwise_rank_ref
+from repro.kernels.rwkv6.ops import wkv6
+
+
+# ---------------------------------------------------------------------------
+# pairwise_rank
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n", [3, 64, 128, 200, 513])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pairwise_rank_kernel_matches_ref(n, dtype):
+    rng = np.random.default_rng(n)
+    s = jnp.asarray(rng.normal(size=n), dtype)
+    t = jnp.asarray(rng.normal(size=n), dtype)
+    m = jnp.asarray((rng.random(n) > 0.25).astype(np.float32))
+    a = pairwise_rank_pallas(s, t, m, block=128)
+    b = pairwise_rank_ref(s.astype(jnp.float32), t.astype(jnp.float32), m)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-2 if
+                               dtype == jnp.bfloat16 else 1e-5, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(2, 300), seed=st.integers(0, 100))
+def test_pairwise_rank_property_sweep(n, seed):
+    rng = np.random.default_rng(seed)
+    s = jnp.asarray(rng.normal(size=n), jnp.float32)
+    t = jnp.asarray(rng.normal(size=n), jnp.float32)
+    m = jnp.ones(n, jnp.float32)
+    a = pairwise_rank_pallas(s, t, m)
+    b = pairwise_rank_ref(s, t, m)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_pairwise_rank_perfect_ranking_is_lowest():
+    """Soft-target BCE is minimized when scores equal the target scores;
+    uninformative (flat) scores are worse, inverted scores worst."""
+    rng = np.random.default_rng(0)
+    t = jnp.asarray(rng.normal(size=64), jnp.float32)
+    m = jnp.ones(64, jnp.float32)
+    loss_exact = float(pairwise_rank_ref(t, t, m))
+    loss_flat = float(pairwise_rank_ref(jnp.zeros(64), t, m))
+    loss_inverted = float(pairwise_rank_ref(-t, t, m))
+    assert loss_exact < loss_flat < loss_inverted
+
+
+def test_pairwise_rank_custom_vjp_grad():
+    rng = np.random.default_rng(1)
+    s = jnp.asarray(rng.normal(size=96), jnp.float32)
+    t = jnp.asarray(rng.normal(size=96), jnp.float32)
+    m = jnp.ones(96, jnp.float32)
+    g1 = jax.grad(lambda s_: pairwise_rank_loss(s_, t, m))(s)
+    g2 = jax.grad(lambda s_: pairwise_rank_ref(s_, t, m))(s)
+    np.testing.assert_allclose(g1, g2, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,kv,dh,causal,win", [
+    (2, 128, 4, 4, 64, True, None),
+    (1, 256, 8, 2, 64, True, None),
+    (1, 128, 4, 1, 32, False, None),
+    (1, 256, 4, 2, 64, True, 64),
+])
+def test_flash_kernel_matches_ref(b, s, h, kv, dh, causal, win, dtype):
+    rng = np.random.default_rng(s + h)
+    q = jnp.asarray(rng.normal(size=(b, s, h, dh)), dtype)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, dh)), dtype)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, dh)), dtype)
+    a = flash_attention(q, k, v, causal=causal, window=win, block_q=64, block_k=64)
+    r = attention_ref(q, k, v, causal=causal, window=win)
+    atol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(a, np.float32),
+                               np.asarray(r, np.float32), atol=atol, rtol=1e-2)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,t,n,chunk", [
+    (4, 128, 64, 64), (2, 256, 32, 64), (8, 64, 64, 32), (1, 64, 16, 16)])
+def test_wkv6_kernel_matches_recurrence(bh, t, n, chunk):
+    rng = np.random.default_rng(bh * t)
+    r = jnp.asarray(rng.normal(size=(bh, t, n)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(bh, t, n)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(bh, t, n)), jnp.float32)
+    logw = jnp.asarray(-np.exp(rng.normal(-2.0, 1.0, size=(bh, t, n))), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(bh, n)) * 0.1, jnp.float32)
+    s0 = jnp.asarray(rng.normal(size=(bh, n, n)) * 0.1, jnp.float32)
+    ya, sa = wkv6(r, k, v, logw, u, s0, impl="pallas", chunk=chunk)
+    yb, sb = wkv6(r, k, v, logw, u, s0, impl="xla")
+    np.testing.assert_allclose(ya, yb, atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(sa, sb, atol=5e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# mamba selective-scan kernel
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("b,t,inner,state,chunk", [
+    (2, 128, 96, 16, 64), (1, 64, 100, 16, 32), (2, 128, 128, 8, 64)])
+def test_mamba_selective_scan_kernel(b, t, inner, state, chunk):
+    from repro.kernels.mamba.ops import selective_scan
+
+    rng = np.random.default_rng(b * t + inner)
+    x = jnp.asarray(rng.normal(size=(b, t, inner)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(0.05, 0.02, size=(b, t, inner))), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(b, t, state)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(b, t, state)), jnp.float32)
+    A = jnp.asarray(-np.abs(rng.normal(1, 0.5, size=(inner, state))), jnp.float32)
+    h0 = jnp.asarray(rng.normal(size=(b, inner, state)) * 0.1, jnp.float32)
+    ya, ha = selective_scan(x, dt, Bm, Cm, A, h0, impl="pallas", chunk=chunk)
+    yb, hb = selective_scan(x, dt, Bm, Cm, A, h0, impl="xla")
+    np.testing.assert_allclose(ya, yb, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(ha, hb, atol=1e-4, rtol=1e-4)
+
+
+def test_mamba_kernel_state_composes():
+    from repro.kernels.mamba.ops import selective_scan
+
+    rng = np.random.default_rng(9)
+    b, t, inner, state = 1, 128, 64, 16
+    x = jnp.asarray(rng.normal(size=(b, t, inner)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.normal(0.05, 0.02, size=(b, t, inner))), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(b, t, state)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(b, t, state)), jnp.float32)
+    A = jnp.asarray(-np.abs(rng.normal(1, 0.5, size=(inner, state))), jnp.float32)
+    h0 = jnp.zeros((b, inner, state), jnp.float32)
+    y_full, h_full = selective_scan(x, dt, Bm, Cm, A, h0, impl="pallas", chunk=32)
+    h = t // 2
+    y1, h1 = selective_scan(x[:, :h], dt[:, :h], Bm[:, :h], Cm[:, :h], A, h0,
+                            impl="pallas", chunk=32)
+    y2, h2 = selective_scan(x[:, h:], dt[:, h:], Bm[:, h:], Cm[:, h:], A, h1,
+                            impl="pallas", chunk=32)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(h2, h_full, atol=1e-4, rtol=1e-4)
+
+
+def test_wkv6_state_carry_composes():
+    """Running [0:T] must equal running [0:T/2] then [T/2:T] with the carried
+    state — the chunked kernel's invariant."""
+    rng = np.random.default_rng(5)
+    bh, t, n = 2, 128, 32
+    mk = lambda: jnp.asarray(rng.normal(size=(bh, t, n)), jnp.float32)
+    r, k, v = mk(), mk(), mk()
+    logw = jnp.asarray(-np.exp(rng.normal(-2.0, 1.0, size=(bh, t, n))), jnp.float32)
+    u = jnp.asarray(rng.normal(size=(bh, n)) * 0.1, jnp.float32)
+    s0 = jnp.zeros((bh, n, n), jnp.float32)
+    y_full, s_full = wkv6(r, k, v, logw, u, s0, impl="pallas", chunk=32)
+    h = t // 2
+    y1, s1 = wkv6(r[:, :h], k[:, :h], v[:, :h], logw[:, :h], u, s0,
+                  impl="pallas", chunk=32)
+    y2, s2 = wkv6(r[:, h:], k[:, h:], v[:, h:], logw[:, h:], u, s1,
+                  impl="pallas", chunk=32)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(s2, s_full, atol=5e-4, rtol=1e-3)

@@ -1,0 +1,123 @@
+"""MoE dispatch + SSM mixer correctness/property tests."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_model_config
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+
+
+def _moe_setup(n_groups=1, capacity_factor=None, dispatch="sort"):
+    cfg = get_model_config("olmoe-1b-7b", smoke=True)
+    moe = dataclasses.replace(
+        cfg.moe, dispatch=dispatch, n_groups=n_groups,
+        **({"capacity_factor": capacity_factor} if capacity_factor else {}))
+    return dataclasses.replace(cfg, moe=moe)
+
+
+@pytest.mark.parametrize("n_groups", [1, 2, 4])
+def test_moe_sort_equals_dense_lossless(n_groups):
+    cfg_s = _moe_setup(n_groups=n_groups)
+    cfg_d = _moe_setup(dispatch="dense")
+    key = jax.random.PRNGKey(0)
+    p = moe_lib.init_moe(key, cfg_s, jnp.float32)
+    x = jax.random.normal(key, (2, 32, cfg_s.d_model))
+    ys, aux_s = moe_lib.apply_moe(p, x, cfg_s)
+    yd, aux_d = moe_lib.apply_moe(p, x, cfg_d)
+    assert float(aux_s["dropped_fraction"]) == 0.0
+    np.testing.assert_allclose(ys, yd, atol=1e-5)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = _moe_setup(capacity_factor=0.25)
+    key = jax.random.PRNGKey(1)
+    p = moe_lib.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 64, cfg.d_model))
+    y, aux = moe_lib.apply_moe(p, x, cfg)
+    assert float(aux["dropped_fraction"]) > 0.0
+    assert not jnp.isnan(y).any()
+
+
+def test_moe_load_balance_loss_bounds():
+    """Uniform routing -> lb loss ~= 1 (its minimum); it must never be < 1-eps."""
+    cfg = _moe_setup()
+    key = jax.random.PRNGKey(2)
+    p = moe_lib.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 128, cfg.d_model))
+    _, aux = moe_lib.apply_moe(p, x, cfg)
+    assert float(aux["load_balance_loss"]) >= 1.0 - 1e-3
+    frac = np.asarray(aux["expert_fraction"])
+    np.testing.assert_allclose(frac.sum(), 1.0, atol=1e-5)
+
+
+def test_moe_gradients_flow_sort():
+    cfg = _moe_setup(n_groups=2)
+    key = jax.random.PRNGKey(3)
+    p = moe_lib.init_moe(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (1, 32, cfg.d_model))
+
+    def loss(p):
+        y, aux = moe_lib.apply_moe(p, x, cfg)
+        return jnp.sum(jnp.square(y)) + moe_lib.moe_aux_loss(aux, cfg)
+
+    g = jax.grad(loss)(p)
+    gnorm = sum(float(jnp.abs(l).sum()) for l in jax.tree.leaves(g))
+    assert np.isfinite(gnorm) and gnorm > 0
+    # router must receive gradient (via gates and aux losses)
+    assert float(jnp.abs(g["router"]).sum()) > 0
+
+
+# ---------------------------------------------------------------------------
+# SSM
+# ---------------------------------------------------------------------------
+
+
+def test_rwkv_chunked_equals_recurrent():
+    cfg = get_model_config("rwkv6-3b", smoke=True)
+    key = jax.random.PRNGKey(0)
+    p = ssm_lib.init_rwkv_time_mix(key, cfg, jnp.float32)
+    x = jax.random.normal(key, (2, 64, cfg.d_model))
+    st = ssm_lib.init_rwkv_state(cfg, 2)
+    y1, s1 = ssm_lib.rwkv_time_mix_chunked(p, x, st, cfg, chunk=16)
+    y2, s2 = ssm_lib.rwkv_time_mix_recurrent(p, x, st, cfg)
+    np.testing.assert_allclose(y1, y2, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(s1.wkv, s2.wkv, atol=2e-4, rtol=1e-3)
+
+
+def test_rwkv_decay_is_contractive():
+    """Property: with zero input k/v, the wkv state must decay toward zero."""
+    cfg = get_model_config("rwkv6-3b", smoke=True)
+    key = jax.random.PRNGKey(1)
+    p = ssm_lib.init_rwkv_time_mix(key, cfg, jnp.float32)
+    b = 1
+    st = ssm_lib.init_rwkv_state(cfg, b)
+    h, n = ssm_lib.rwkv_dims(cfg)
+    st = ssm_lib.RWKVState(jnp.ones((b, h, n, n)), st.shift_tm, st.shift_cm)
+    x = jnp.zeros((b, 32, cfg.d_model))
+    _, s2 = ssm_lib.rwkv_time_mix_recurrent(p, x, st, cfg)
+    # decay w in (0,1): norm must shrink (k=0 adds tiny kv from token-shift
+    # of zeros -> exactly zero input)
+    assert float(jnp.abs(s2.wkv).mean()) < float(jnp.abs(st.wkv).mean())
+
+
+def test_mamba_scan_decode_composes():
+    cfg = get_model_config("hymba-1.5b", smoke=True)
+    key = jax.random.PRNGKey(2)
+    p = ssm_lib.init_mamba(key, cfg, jnp.float32)
+    b, t = 2, 16
+    x = jax.random.normal(key, (b, t, cfg.d_model))
+    st0 = ssm_lib.init_mamba_state(cfg, b)
+    y_full, s_full = ssm_lib.mamba_scan(p, x, st0, cfg)
+    # step one token at a time
+    st = st0
+    ys = []
+    for i in range(t):
+        yi, st = ssm_lib.mamba_scan(p, x[:, i:i + 1], st, cfg)
+        ys.append(yi)
+    y_steps = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_steps, y_full, atol=2e-5, rtol=1e-4)
+    np.testing.assert_allclose(st.h, s_full.h, atol=2e-5, rtol=1e-4)

@@ -1,0 +1,74 @@
+"""Pod-scale FL simulation path: K clients' local training as one vmapped
+(pjit-able) step — results must match the sequential per-client loop."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.client import local_train, make_parallel_local_train
+
+
+def test_parallel_local_train_matches_sequential(mlp_task, fl_data):
+    key = jax.random.PRNGKey(0)
+    global_params = mlp_task.init(key)
+    k_clients = 4
+    bs, nb, epochs = 16, 2, 2
+    cap = bs * nb
+
+    xs, ys, masks = [], [], []
+    for c in range(k_clients):
+        idx = fl_data.client_indices[c][:cap]
+        n = len(idx)
+        x = np.zeros((cap,) + fl_data.train.x.shape[1:], np.float32)
+        y = np.zeros((cap,), np.int32)
+        m = np.zeros((cap,), np.float32)
+        x[:n] = fl_data.train.x[idx]
+        y[:n] = fl_data.train.y[idx]
+        m[:n] = 1.0
+        xs.append(x); ys.append(y); masks.append(m)
+    xs, ys, masks = map(lambda a: jnp.asarray(np.stack(a)), (xs, ys, masks))
+
+    par = make_parallel_local_train(mlp_task, batch_size=bs, n_batches=nb,
+                                    epochs=epochs)
+    stacked_params, probe_losses = jax.jit(par)(global_params, xs, ys, masks,
+                                                jnp.asarray(0.1))
+    assert probe_losses.shape == (k_clients,)
+    assert np.isfinite(np.asarray(probe_losses)).all()
+    # per-client params differ from the global and from each other
+    w1 = np.asarray(stacked_params["w1"])
+    assert w1.shape[0] == k_clients
+    assert not np.allclose(w1[0], w1[1])
+    # loss decreased for each client vs the global params
+    for c in range(k_clients):
+        p_c = jax.tree.map(lambda a: a[c], stacked_params)
+        batch = {"x": xs[c], "y": ys[c], "mask": masks[c]}
+        l_after = float(mlp_task.loss(p_c, batch))
+        l_before = float(mlp_task.loss(global_params, batch))
+        assert l_after < l_before
+
+
+def test_parallel_local_train_sharded_over_mesh(mlp_task, fl_data):
+    """Same step under an explicit 1-device mesh with clients on 'data' —
+    the pod-scale configuration (sharding is a no-op at 1 device but the
+    pjit path is exercised)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import make_host_mesh
+
+    mesh = make_host_mesh()
+    key = jax.random.PRNGKey(1)
+    global_params = mlp_task.init(key)
+    k_clients, bs, nb = 2, 8, 2
+    cap = bs * nb
+    rng = np.random.default_rng(0)
+    xs = jnp.asarray(rng.normal(size=(k_clients, cap, 32)), jnp.float32)
+    ys = jnp.asarray(rng.integers(0, 10, size=(k_clients, cap)), jnp.int32)
+    masks = jnp.ones((k_clients, cap), jnp.float32)
+
+    par = make_parallel_local_train(mlp_task, batch_size=bs, n_batches=nb,
+                                    epochs=1)
+    shard = NamedSharding(mesh, P("data"))
+    with mesh:
+        f = jax.jit(par, in_shardings=(None, shard, shard, shard, None))
+        stacked, losses = f(global_params, xs, ys, masks, jnp.asarray(0.1))
+    assert losses.shape == (k_clients,)
+    assert np.isfinite(np.asarray(losses)).all()

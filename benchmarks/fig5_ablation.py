@@ -10,7 +10,7 @@ from typing import Dict, List
 
 from benchmarks.common import build_env, emit_csv
 from benchmarks.table1_selection import pretrained_qnet
-from repro.core import make_fedrank_variant
+from repro.fl import build_policy
 
 
 def run_il_objective_ablation(make_server, seed: int = 0, verbose: bool = True):
@@ -34,15 +34,16 @@ def run_il_objective_ablation(make_server, seed: int = 0, verbose: bool = True):
 
 
 def run(rounds: int = 25, k: int = 5, n_devices: int = 40, seed: int = 0,
-        verbose: bool = True):
+        verbose: bool = True, executor: str = "sequential"):
     make_server, _, _ = build_env(n_devices=n_devices, k=k, rounds=rounds,
-                                  sigma=0.1, seed=seed)
+                                  sigma=0.1, seed=seed, executor=executor)
     run_il_objective_ablation(make_server, seed=seed, verbose=verbose)
     q, il_hist = pretrained_qnet(make_server)
     rows: List[Dict] = []
     traces: List[Dict] = []
-    for variant in ("full", "no_il", "no_rank", "no_il_no_rank"):
-        pol = make_fedrank_variant(variant, q, k=k, seed=seed)
+    # the registry's ablation family: full / no-IL / no-rank-loss / plain DQN
+    for variant in ("fedrank", "fedrank-I", "fedrank-P", "fedrank-IP"):
+        pol = build_policy(variant, qnet=q, k=k, seed=seed)
         srv = make_server(2)
         hist = srv.run(pol)
         rows.append({

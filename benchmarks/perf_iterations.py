@@ -3,19 +3,30 @@
 
 MUST run in its own process (sets the 512-device flag):
     PYTHONPATH=src python -m benchmarks.perf_iterations --out results/perf.json
+
+FL round-engine mode (real CPU timing, so NO 512-device flag):
+    PYTHONPATH=src python -m benchmarks.perf_iterations --fl-executors
+
+compares the sequential reference ClientExecutor against the vmapped
+pod-scale executor on wall-clock time per FL round across cohort sizes.
 """
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+
+# the dry-run experiments need the 512-device host platform; the FL executor
+# timing mode needs the real single CPU device — decide before jax loads
+if "--fl-executors" not in sys.argv:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
+import time
 from typing import Any, Dict
-
-from repro.launch.dryrun import run_one
-from repro.launch.roofline import row_from_record
 
 
 def _summ(rec: Dict[str, Any]) -> Dict[str, Any]:
+    from repro.launch.roofline import row_from_record
+
     if rec["status"] != "ok":
         return {"status": rec["status"], "error": rec.get("error", "")[:200]}
     row = row_from_record(rec)
@@ -86,11 +97,82 @@ def _apply_special_overrides(kwargs: Dict[str, Any], arch: str):
     return kwargs
 
 
+# ---------------------------------------------------------------------------
+# FL round-engine comparison: sequential vs vmapped ClientExecutor
+# ---------------------------------------------------------------------------
+
+
+def run_fl_executor_bench(ks=(4, 8, 16, 32), rounds: int = 3,
+                          l_ep: int = 3, verbose: bool = True):
+    """Steady-state wall-clock per FL round for each executor at cohort size
+    K (all K clients selected each round, equal-size shards so the vmapped
+    path runs one bucket = one jitted step per stage)."""
+    from repro.data import FederatedData, iid_partition, make_classification_data
+    from repro.fl import FLConfig, FLServer, MLPTask, build_policy
+
+    rows = []
+    for k in ks:
+        n_devices = int(k)
+        train, test = make_classification_data(n_samples=256 * n_devices, seed=0)
+        parts = iid_partition(len(train.y), n_devices, seed=0, size_skew=0.0)
+        data = FederatedData(train, test, parts)
+        task = MLPTask(dim=32, hidden=64, n_classes=10)
+        per_round, per_stage = {}, {}
+        for executor in ("sequential", "vmapped"):
+            cfg = FLConfig(n_devices=n_devices, k_select=k, rounds=rounds,
+                           l_ep=l_ep, lr=0.1, seed=0, executor=executor)
+            srv = FLServer(cfg, task, data)
+            policy = build_policy("fedavg")
+            srv.run_round(policy)              # warmup: jit compile
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                srv.run_round(policy)
+            per_round[executor] = (time.perf_counter() - t0) / rounds
+            # stage-level: executor.run alone, isolating client execution
+            # from eval/selection/cost accounting shared by both executors
+            from repro.fl.engine import ClientRequest
+
+            reqs = [ClientRequest(i, *srv._client_data(i), epochs=l_ep, seed=i)
+                    for i in range(k)]
+            srv._execute(reqs)                 # warmup for this shape
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                srv._execute(reqs)
+            per_stage[executor] = (time.perf_counter() - t0) / rounds
+        row = {"bench": "fl_round_engine", "k": k, "l_ep": l_ep,
+               "sequential_round_s": round(per_round["sequential"], 4),
+               "vmapped_round_s": round(per_round["vmapped"], 4),
+               "speedup": round(per_round["sequential"] / per_round["vmapped"], 2),
+               "sequential_exec_s": round(per_stage["sequential"], 4),
+               "vmapped_exec_s": round(per_stage["vmapped"], 4),
+               "exec_speedup": round(per_stage["sequential"] / per_stage["vmapped"], 2)}
+        rows.append(row)
+        if verbose:
+            print(json.dumps(row), flush=True)
+    return rows
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--out", default="results/perf_iterations.json")
+    # allow_abbrev=False keeps argparse in sync with the literal sys.argv
+    # check above that decides the XLA device-count flag
+    ap = argparse.ArgumentParser(allow_abbrev=False)
+    ap.add_argument("--out", default=None)
     ap.add_argument("--only", default=None, help="run a single pair")
+    ap.add_argument("--fl-executors", action="store_true",
+                    help="time sequential vs vmapped FL round execution "
+                         "instead of the HLO dry-run iterations")
     args = ap.parse_args()
+    if args.fl_executors:
+        out = args.out or "results/fl_executors.json"
+        results = run_fl_executor_bench()
+        os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+        return
+    args.out = args.out or "results/perf_iterations.json"
+
+    from repro.launch.dryrun import run_one  # noqa: F401 (after XLA_FLAGS)
+
     results = []
     for pair, arch, shape, it_name, kwargs in EXPERIMENTS:
         if args.only and pair != args.only:

@@ -13,17 +13,11 @@ import numpy as np
 
 from benchmarks.common import build_env, emit_csv, time_to_accuracy
 from repro.core import (
-    AFLPolicy,
-    FavorPolicy,
-    FedMarlPolicy,
-    FedRankPolicy,
-    OortPolicy,
-    RandomPolicy,
-    TiFLPolicy,
     augment_demonstrations,
     collect_demonstrations,
     pretrain_qnet,
 )
+from repro.fl import build_policy
 
 
 def pretrained_qnet(make_server, rounds_per_expert: int = 8, steps: int = 800,
@@ -35,28 +29,30 @@ def pretrained_qnet(make_server, rounds_per_expert: int = 8, steps: int = 800,
 
 
 def run(rounds: int = 25, k: int = 5, n_devices: int = 40, seed: int = 0,
-        verbose: bool = True) -> List[Dict]:
+        verbose: bool = True, executor: str = "sequential") -> List[Dict]:
     rows = []
     for setting, sigma in (("iid", None), ("non-iid", 0.1)):
         make_server, task, data = build_env(n_devices=n_devices, k=k,
-                                            rounds=rounds, sigma=sigma, seed=seed)
+                                            rounds=rounds, sigma=sigma,
+                                            seed=seed, executor=executor)
         make_prox, _, _ = build_env(n_devices=n_devices, k=k, rounds=rounds,
-                                    sigma=sigma, seed=seed, prox_mu=0.1)
+                                    sigma=sigma, seed=seed, prox_mu=0.1,
+                                    executor=executor)
         q, _ = pretrained_qnet(make_server)
         policies = [
-            ("fedavg", make_server, lambda: RandomPolicy("fedavg")),
-            ("fedprox", make_prox, lambda: RandomPolicy("fedprox")),
-            ("afl", make_server, lambda: AFLPolicy()),
-            ("tifl", make_server, lambda: TiFLPolicy()),
-            ("oort", make_server, lambda: OortPolicy()),
-            ("favor", make_server, lambda: FavorPolicy(seed=seed)),
-            ("fedmarl", make_server, lambda: FedMarlPolicy()),
-            ("fedrank", make_server, lambda: FedRankPolicy(q, k=k, seed=seed)),
+            ("fedavg", make_server, {}),
+            ("fedprox", make_prox, {}),
+            ("afl", make_server, {}),
+            ("tifl", make_server, {}),
+            ("oort", make_server, {}),
+            ("favor", make_server, {"seed": seed}),
+            ("fedmarl", make_server, {}),
+            ("fedrank", make_server, {"qnet": q, "k": k, "seed": seed}),
         ]
         base_hist = None
-        for name, mk, mkpol in policies:
+        for name, mk, pol_kw in policies:
             srv = mk(1)
-            hist = srv.run(mkpol())
+            hist = srv.run(build_policy(name, **pol_kw))
             if name == "fedavg":
                 base_hist = hist
             # target = 95% of fedavg's final accuracy (paper uses fixed targets)
@@ -83,7 +79,15 @@ def run(rounds: int = 25, k: int = 5, n_devices: int = 40, seed: int = 0,
 
 
 def main() -> None:
-    rows = run()
+    import argparse
+
+    from repro.fl import available_executors
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--executor", default="sequential",
+                    choices=available_executors())
+    args = ap.parse_args()
+    rows = run(executor=args.executor)
     emit_csv(rows, ["setting", "policy", "final_acc", "toa_s", "eoa_J",
                     "speedup_vs_fedavg", "energy_vs_fedavg",
                     "cum_time_s", "cum_energy_J"])

@@ -21,13 +21,6 @@ import numpy as np
 
 from repro.configs import get_model_config
 from repro.core import (
-    AFLPolicy,
-    FavorPolicy,
-    FedMarlPolicy,
-    FedRankPolicy,
-    OortPolicy,
-    RandomPolicy,
-    TiFLPolicy,
     augment_demonstrations,
     collect_demonstrations,
     pretrain_qnet,
@@ -39,7 +32,10 @@ from repro.data import (
     make_classification_data,
     make_lm_stream,
 )
-from repro.fl import FLConfig, FLServer, LMTask, MLPTask
+from repro.fl import FLConfig, FLServer, LMTask, MLPTask, available_executors, \
+    build_policy
+
+POLICY_NAMES = ("fedavg", "afl", "tifl", "oort", "favor", "fedmarl", "fedrank")
 
 
 def build_lm_fl_data(cfg, n_clients: int, seq: int = 32, seed: int = 0):
@@ -67,6 +63,10 @@ def main() -> None:
     ap.add_argument("--sigma", type=float, default=0.1)
     ap.add_argument("--arch", default=None,
                     help="use a reduced assigned arch as the FL global model")
+    ap.add_argument("--executor", default="sequential",
+                    choices=available_executors(),
+                    help="client executor: 'vmapped' runs each cohort as one "
+                         "jitted step")
     args = ap.parse_args()
 
     if args.arch:
@@ -83,7 +83,8 @@ def main() -> None:
 
     def make_server(seed=1):
         return FLServer(FLConfig(n_devices=args.devices, k_select=args.k,
-                                 rounds=args.rounds, l_ep=3, lr=lr, seed=seed),
+                                 rounds=args.rounds, l_ep=3, lr=lr, seed=seed,
+                                 executor=args.executor),
                         task, data)
 
     print("== collecting expert demonstrations (Alg. 1) ==")
@@ -95,11 +96,9 @@ def main() -> None:
 
     print("\n== online FL: all selection policies ==")
     results = {}
-    for mkpol in (lambda: RandomPolicy(), lambda: AFLPolicy(),
-                  lambda: TiFLPolicy(), lambda: OortPolicy(),
-                  lambda: FavorPolicy(), lambda: FedMarlPolicy(),
-                  lambda: FedRankPolicy(qnet, k=args.k)):
-        pol = mkpol()
+    for name in POLICY_NAMES:
+        kw = {"qnet": qnet, "k": args.k} if name == "fedrank" else {}
+        pol = build_policy(name, **kw)
         hist = make_server().run(pol)
         results[pol.name] = hist
         print(f"{pol.name:10s} acc={hist[-1].acc:.4f} "

@@ -12,7 +12,14 @@ from typing import Any, Optional
 
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:          # offline image: fall back to stdlib zlib
+    zstandard = None
+import zlib
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
 
 _ARR_KEY = "__ndarray__"
 _TUPLE_KEY = "__tuple__"
@@ -55,7 +62,10 @@ def save_pytree(tree: Any, path: str) -> None:
 
     host = jax.tree.map(lambda x: np.asarray(x), tree)
     payload = msgpack.packb(_encode(host), use_bin_type=True)
-    comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    if zstandard is not None:
+        comp = zstandard.ZstdCompressor(level=3).compress(payload)
+    else:
+        comp = zlib.compress(payload, level=3)
     tmp = path + ".tmp"
     with open(tmp, "wb") as f:
         f.write(comp)
@@ -65,7 +75,13 @@ def save_pytree(tree: Any, path: str) -> None:
 def load_pytree(path: str) -> Any:
     with open(path, "rb") as f:
         comp = f.read()
-    payload = zstandard.ZstdDecompressor().decompress(comp)
+    if comp[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(f"{path} is zstd-compressed but the zstandard "
+                               "module is not installed")
+        payload = zstandard.ZstdDecompressor().decompress(comp)
+    else:
+        payload = zlib.decompress(comp)
     return _decode(msgpack.unpackb(payload, raw=False))
 
 

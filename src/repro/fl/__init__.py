@@ -1,13 +1,31 @@
 from repro.fl.simulation import DevicePool, DeviceProfile, RoundSystemState
 from repro.fl.tasks import MLPTask, LMTask, ClientTask
-from repro.fl.client import local_train, probing_epoch
+from repro.fl.client import local_train, probing_epoch, make_parallel_local_train
 from repro.fl.aggregation import fedavg, weighted_delta_aggregate
 from repro.fl.server import FLServer, FLConfig, RoundResult
+from repro.fl.engine import (
+    ClientExecutor,
+    ClientRequest,
+    ExecutionResult,
+    RoundPlan,
+    SequentialExecutor,
+    VmappedExecutor,
+    available_executors,
+    build_round_plan,
+    make_executor,
+    register_executor,
+)
+from repro.fl.registry import available_policies, build_policy, register_policy
 
 __all__ = [
     "DevicePool", "DeviceProfile", "RoundSystemState",
     "MLPTask", "LMTask", "ClientTask",
-    "local_train", "probing_epoch",
+    "local_train", "probing_epoch", "make_parallel_local_train",
     "fedavg", "weighted_delta_aggregate",
     "FLServer", "FLConfig", "RoundResult",
+    "RoundPlan", "build_round_plan",
+    "ClientExecutor", "ClientRequest", "ExecutionResult",
+    "SequentialExecutor", "VmappedExecutor",
+    "make_executor", "register_executor", "available_executors",
+    "build_policy", "register_policy", "available_policies",
 ]

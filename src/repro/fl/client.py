@@ -20,9 +20,24 @@ import numpy as np
 Params = Any
 
 
+def _bucket_cap(n: int) -> int:
+    """Padded shard size: next power of two, minimum 8."""
+    return max(8, 1 << (n - 1).bit_length())
+
+
+def _bucket_geometry(n: int, batch_size: int) -> Tuple[int, int, int]:
+    """(cap, batch_size, n_batches) for an n-sample client shard — the single
+    source of the padding/batching rule shared by ``local_train`` and the
+    vmapped executor (``repro.fl.engine``); diverging copies would silently
+    break their numerical parity."""
+    cap = _bucket_cap(n)
+    bs = min(batch_size, cap)
+    return cap, bs, cap // bs
+
+
 def _pad_bucket(x: np.ndarray, y: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
     n = len(y)
-    cap = max(8, 1 << (n - 1).bit_length())
+    cap = _bucket_cap(n)
     pad = cap - n
     xpad = np.concatenate([x, np.zeros((pad,) + x.shape[1:], x.dtype)])
     ypad = np.concatenate([y, np.zeros((pad,) + y.shape[1:], y.dtype)])
@@ -78,9 +93,7 @@ def local_train(
     losses[0] is the probing loss the FedRank scheme reports to the server."""
     rng = np.random.default_rng(seed)
     xpad, ypad, mask = _pad_bucket(x, y)
-    cap = len(ypad)
-    bs = min(batch_size, cap)
-    nb = cap // bs
+    cap, bs, nb = _bucket_geometry(len(y), batch_size)
     epoch_fn = _make_epoch_fn(task, bs, nb, float(prox_mu))
     p_global = params
     losses = []
@@ -109,22 +122,33 @@ def probing_epoch(task, params: Params, x: np.ndarray, y: np.ndarray, *,
 
 
 def make_parallel_local_train(task, *, batch_size: int, n_batches: int,
-                              epochs: int, prox_mu: float = 0.0) -> Callable:
-    """Returns f(global_params, xs (K, n_batches*bs, ...), ys, masks, lr)
-    -> (stacked client params (K, ...), probe losses (K,)).
+                              epochs: int, prox_mu: float = 0.0,
+                              stacked_params: bool = False) -> Callable:
+    """Returns f(init_params, xs (K, cap, ...), ys, masks, lr[, perms])
+    -> (stacked client params (K, ...), per-epoch mean losses (K, epochs)).
 
     vmap over the client axis; under pjit the K axis is sharded over the mesh
     ``data`` axis, so each chip simulates a slice of the cohort.
+
+    * ``stacked_params=True`` vmaps over a per-client leading axis of
+      ``init_params`` too (each client resumes from its own params, e.g. the
+      probe-stage output); otherwise the single pytree is broadcast.  The
+      FedProx proximal term anchors to each client's own init params — the
+      same semantics as the sequential :func:`local_train`.
+    * ``perms`` (K, epochs, n_batches*batch_size) int32 optionally supplies
+      per-client per-epoch shuffle orders (gathered inside the jit), letting
+      callers reproduce the host-side shuffling of :func:`local_train`
+      exactly.  When omitted, every epoch scans the shards in storage order.
+    * ``losses[:, 0]`` is the probe loss the FedRank scheme reports.
     """
+    take = n_batches * batch_size
 
-    def one_client(p_global, x, y, mask, lr):
-        epoch_fn_inner = None
-
+    def one_client(p_init, x, y, mask, lr, perm):
         def prox_loss(p, batch):
             l = task.loss(p, batch)
             if prox_mu > 0.0:
                 sq = sum(jnp.sum(jnp.square(a.astype(jnp.float32) - b.astype(jnp.float32)))
-                         for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p_global)))
+                         for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(p_init)))
                 l = l + 0.5 * prox_mu * sq
             return l
 
@@ -136,18 +160,23 @@ def make_parallel_local_train(task, *, batch_size: int, n_batches: int,
                                ).astype(p.dtype), params, g)
             return params, loss
 
-        def epoch(params, _):
-            xs = (x.reshape((n_batches, batch_size) + x.shape[1:]),
-                  y.reshape((n_batches, batch_size)),
-                  mask.reshape((n_batches, batch_size)))
+        def epoch(params, pe):
+            xe, ye, me = x[pe], y[pe], mask[pe]
+            xs = (xe.reshape((n_batches, batch_size) + x.shape[1:]),
+                  ye.reshape((n_batches, batch_size) + y.shape[1:]),
+                  me.reshape((n_batches, batch_size)))
             params, losses = jax.lax.scan(sgd_step, params, xs)
             return params, losses.mean()
 
-        params, ep_losses = jax.lax.scan(epoch, p_global, jnp.arange(epochs))
-        return params, ep_losses[0]
+        params, ep_losses = jax.lax.scan(epoch, p_init, perm)
+        return params, ep_losses
 
-    def parallel(p_global, xs, ys, masks, lr):
-        return jax.vmap(one_client, in_axes=(None, 0, 0, 0, None))(
-            p_global, xs, ys, masks, lr)
+    def parallel(p_init, xs, ys, masks, lr, perms=None):
+        if perms is None:
+            perms = jnp.broadcast_to(jnp.arange(take, dtype=jnp.int32),
+                                     (xs.shape[0], epochs, take))
+        return jax.vmap(one_client,
+                        in_axes=(0 if stacked_params else None, 0, 0, 0, None, 0))(
+            p_init, xs, ys, masks, lr, perms)
 
     return parallel

@@ -1,0 +1,292 @@
+"""Round-execution engine: RoundPlan + pluggable ClientExecutors.
+
+This module is the seam between *what* a round does and *how* its client
+work is executed:
+
+* :class:`RoundPlan` — the explicit stage structure of one FL round
+  (probe → select → complete), emitted per policy by
+  :func:`build_round_plan`.  Probing policies (FedRank, FedMarl) get a
+  1-epoch probe stage over ``policy.probe_set(ctx)`` whose survivors
+  complete the remaining ``l_ep - 1`` epochs; non-probing baselines get an
+  empty probe stage and a full ``l_ep``-epoch completion stage.  The server
+  executes any plan uniformly — no per-policy branching.
+* :class:`ClientExecutor` — the protocol for running a batch of per-client
+  local-training requests.  :class:`SequentialExecutor` is the reference
+  implementation (one :func:`repro.fl.client.local_train` call per client,
+  the seed repo's semantics).  :class:`VmappedExecutor` pads clients into
+  power-of-two size buckets and runs each bucket's cohort as ONE
+  jitted/vmapped step via :func:`repro.fl.client.make_parallel_local_train`
+  — optionally sharding the client axis over a mesh ``data`` axis
+  (``repro.launch.mesh``), which is the TPU pod-scale path.  Both executors
+  replay identical per-client shuffle orders, so they produce numerically
+  matching global models.
+
+Executors are looked up by name (``FLConfig.executor``) through a small
+registry so new execution backends (async, remote, failure-injecting) plug
+in without touching the server.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Protocol, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.client import (
+    _bucket_geometry,
+    _pad_bucket,
+    local_train,
+    make_parallel_local_train,
+)
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Round plans
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RoundPlan:
+    """Explicit stage structure of one FL round.
+
+    probe stage      — every device in ``probe_ids`` runs ``probe_epochs``
+                       local epochs from the global params and reports its
+                       loss (empty ``probe_ids`` skips the stage);
+    select           — the policy cuts the cohort down to K survivors
+                       (probing policies see the revealed probe states);
+    completion stage — survivors run ``completion_epochs`` further epochs
+                       (resuming from their probed params when probed) and
+                       upload for aggregation.
+    """
+
+    probe_ids: np.ndarray
+    probe_epochs: int
+    completion_epochs: int
+
+    @property
+    def has_probe(self) -> bool:
+        return len(self.probe_ids) > 0 and self.probe_epochs > 0
+
+
+def build_round_plan(policy, ctx, l_ep: int) -> RoundPlan:
+    """Adapt a SelectionPolicy into a RoundPlan.
+
+    Policies may emit a custom plan via ``policy.plan_round(ctx, l_ep)``;
+    otherwise the declared ``needs_probing`` capability maps onto the
+    paper's two round shapes.  This is the only place that capability is
+    consulted — the server just executes the plan.
+    """
+    plan_fn = getattr(policy, "plan_round", None)
+    if plan_fn is not None:
+        return plan_fn(ctx, l_ep)
+    if getattr(policy, "needs_probing", False):
+        probe_ids = np.asarray(policy.probe_set(ctx), dtype=np.int64)
+        return RoundPlan(probe_ids, probe_epochs=1, completion_epochs=l_ep - 1)
+    return RoundPlan(np.empty(0, np.int64), probe_epochs=0,
+                     completion_epochs=l_ep)
+
+
+# ---------------------------------------------------------------------------
+# Client executors
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ClientRequest:
+    """One client's local-training work item for a stage."""
+
+    client_id: int
+    x: np.ndarray
+    y: np.ndarray
+    epochs: int
+    seed: int
+    init_params: Optional[Params] = None   # None => start from global params
+
+
+@dataclass
+class ExecutionResult:
+    """Per-client outputs of a stage, keyed by client id."""
+
+    params: Dict[int, Params] = field(default_factory=dict)
+    losses: Dict[int, np.ndarray] = field(default_factory=dict)
+
+
+class ClientExecutor(Protocol):
+    name: str
+
+    def run(self, task, global_params: Params,
+            requests: Sequence[ClientRequest], *, lr: float,
+            batch_size: int, prox_mu: float) -> ExecutionResult: ...
+
+
+class SequentialExecutor:
+    """Reference semantics: one ``local_train`` call per client, in order."""
+
+    name = "sequential"
+
+    def run(self, task, global_params, requests, *, lr, batch_size, prox_mu
+            ) -> ExecutionResult:
+        out = ExecutionResult()
+        for req in requests:
+            init = req.init_params if req.init_params is not None else global_params
+            p, losses = local_train(task, init, req.x, req.y,
+                                    epochs=req.epochs, lr=lr,
+                                    batch_size=batch_size, prox_mu=prox_mu,
+                                    seed=req.seed)
+            out.params[req.client_id] = p
+            out.losses[req.client_id] = losses
+        return out
+
+
+@functools.lru_cache(maxsize=256)
+def _bucket_step(task, batch_size: int, n_batches: int, epochs: int,
+                 prox_mu: float, stacked_params: bool):
+    """Jitted whole-bucket step, cached per (task, geometry, epochs)."""
+    fn = make_parallel_local_train(task, batch_size=batch_size,
+                                   n_batches=n_batches, epochs=epochs,
+                                   prox_mu=prox_mu,
+                                   stacked_params=stacked_params)
+    return jax.jit(fn)
+
+
+class VmappedExecutor:
+    """Pod-scale path: the whole cohort's local training as one jitted step.
+
+    Clients are grouped into (padded-size, epochs) buckets; each bucket is a
+    single vmapped call over the client axis, with host-side shuffle orders
+    fed in as gather indices so results match :class:`SequentialExecutor`
+    numerically.  Pass a ``Mesh`` (see :mod:`repro.launch.mesh`) to shard
+    the client axis over the mesh ``data`` axis.
+    """
+
+    name = "vmapped"
+
+    def __init__(self, mesh=None):
+        self.mesh = mesh
+
+    def run(self, task, global_params, requests, *, lr, batch_size, prox_mu
+            ) -> ExecutionResult:
+        out = ExecutionResult()
+        buckets: Dict[tuple, List[ClientRequest]] = {}
+        for req in requests:
+            if req.epochs <= 0:
+                init = (req.init_params if req.init_params is not None
+                        else global_params)
+                out.params[req.client_id] = init
+                out.losses[req.client_id] = np.zeros(0)
+                continue
+            cap, _, _ = _bucket_geometry(len(req.y), batch_size)
+            buckets.setdefault((cap, req.epochs), []).append(req)
+        for (cap, epochs), reqs in buckets.items():
+            self._run_bucket(task, global_params, reqs, cap, epochs, out,
+                             lr=lr, batch_size=batch_size, prox_mu=prox_mu)
+        return out
+
+    def _run_bucket(self, task, global_params, reqs, cap, epochs, out, *,
+                    lr, batch_size, prox_mu):
+        _, bs, nb = _bucket_geometry(cap, batch_size)
+        take = nb * bs
+        k = len(reqs)
+        xs, ys, masks, perms = [], [], [], []
+        for req in reqs:
+            xpad, ypad, mask = _pad_bucket(req.x, req.y)
+            xs.append(xpad)
+            ys.append(ypad)
+            masks.append(mask)
+            rng = np.random.default_rng(req.seed)
+            perms.append(np.stack([rng.permutation(cap)[:take]
+                                   for _ in range(epochs)]).astype(np.int32))
+        stacked_init = any(req.init_params is not None for req in reqs)
+        inits = ([req.init_params if req.init_params is not None
+                  else global_params for req in reqs] if stacked_init else None)
+        # pad the client axis up to a multiple of the mesh data-axis size
+        # (duplicates of the last client; results discarded) so sharding
+        # never silently degrades to replicated execution
+        n_pad = (-k) % self._mesh_axis_size() if self.mesh is not None else 0
+        for _ in range(n_pad):
+            for lst in (xs, ys, masks, perms):
+                lst.append(lst[-1])
+            if stacked_init:
+                inits.append(inits[-1])
+        xs = jnp.asarray(np.stack(xs))
+        ys = jnp.asarray(np.stack(ys))
+        masks = jnp.asarray(np.stack(masks))
+        perms = jnp.asarray(np.stack(perms))
+        if stacked_init:
+            p0 = jax.tree.map(
+                lambda *ls: jnp.asarray(np.stack([np.asarray(l) for l in ls])),
+                *inits)
+        else:
+            # shared start (probe stage / vanilla rounds): pass the single
+            # pytree and let vmap broadcast it inside XLA — no K-fold copy
+            p0 = global_params
+        step = _bucket_step(task, bs, nb, epochs, float(prox_mu), stacked_init)
+        xs, ys, masks, perms = self._shard((xs, ys, masks, perms))
+        p0 = self._shard_params(p0, stacked_init)
+        stacked, ep_losses = step(p0, xs, ys, masks,
+                                  jnp.asarray(lr, jnp.float32), perms)
+        # one device->host transfer per leaf, then cheap numpy views per
+        # client — slicing on device would cost K x leaves dispatches
+        stacked = jax.tree.map(np.asarray, stacked)
+        ep_losses = np.asarray(ep_losses)
+        for j, req in enumerate(reqs):
+            out.params[req.client_id] = jax.tree.map(lambda a, j=j: a[j], stacked)
+            out.losses[req.client_id] = ep_losses[j]
+
+    def _mesh_axis_size(self) -> int:
+        """Size of the mesh ``data`` axis (buckets are padded to a multiple)."""
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape)
+                    ).get("data", 1)
+
+    def _shard(self, args):
+        """Place the client axis on the mesh ``data`` axis."""
+        if self.mesh is None:
+            return args
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        shard = NamedSharding(self.mesh, P("data"))
+        return jax.tree.map(lambda a: jax.device_put(a, shard), args)
+
+    def _shard_params(self, p0, stacked_init: bool):
+        """Stacked params shard over clients; a shared pytree is replicated."""
+        if self.mesh is None:
+            return p0
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        spec = NamedSharding(self.mesh, P("data") if stacked_init else P())
+        return jax.tree.map(lambda a: jax.device_put(a, spec), p0)
+
+
+# ---------------------------------------------------------------------------
+# Executor registry
+# ---------------------------------------------------------------------------
+
+_EXECUTORS: Dict[str, Callable[..., ClientExecutor]] = {}
+
+
+def register_executor(name: str, factory: Callable[..., ClientExecutor]) -> None:
+    if name in _EXECUTORS:
+        raise ValueError(f"executor {name!r} already registered")
+    _EXECUTORS[name] = factory
+
+
+def make_executor(name: str, **kw) -> ClientExecutor:
+    try:
+        factory = _EXECUTORS[name]
+    except KeyError:
+        raise KeyError(f"unknown executor {name!r}; "
+                       f"registered: {sorted(_EXECUTORS)}") from None
+    return factory(**kw)
+
+
+def available_executors() -> List[str]:
+    return sorted(_EXECUTORS)
+
+
+register_executor("sequential", SequentialExecutor)
+register_executor("vmapped", VmappedExecutor)

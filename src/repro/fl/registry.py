@@ -1,0 +1,102 @@
+"""Selection-policy registry: build any policy by name.
+
+Every selection approach in the repo — FedRank and its ablation variants,
+the paper's baselines, and the analytical IL experts — registers a factory
+here, so drivers (examples, benchmarks, sweeps) construct policies uniformly
+with :func:`build_policy` instead of importing concrete classes:
+
+    from repro.fl.registry import build_policy
+    policy = build_policy("fedrank", qnet=q, k=10)
+    policy = build_policy("oort")
+
+Registered names (see :func:`available_policies`):
+
+* ``fedavg`` / ``random`` — uniform random K of N (FedAvg; pair with
+  ``FLConfig.prox_mu > 0`` for FedProx)
+* ``fedprox`` — same selection, conventional name for prox runs
+* ``afl``, ``tifl``, ``oort``, ``favor``, ``fedmarl`` — the paper's
+  heuristic/learning baselines
+* ``fedrank``, ``fedrank-I``, ``fedrank-P``, ``fedrank-IP`` — the paper's
+  policy and its no-IL / no-rank-loss / plain-DQN ablations (pass
+  ``qnet=...`` for the IL-pretrained variants)
+* ``expert-oort``, ``expert-harmony``, ``expert-fedmarl`` — the analytical
+  IL teachers wrapped as probing policies
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+from repro.fl.server import SelectionPolicy
+
+_POLICIES: Dict[str, Callable[..., SelectionPolicy]] = {}
+_populated = False
+
+
+def _populate() -> None:
+    """Register the built-in policies on first use.
+
+    Deferred (not at import time) because the concrete policy classes live
+    in ``repro.core``, which itself imports ``repro.fl`` — registering
+    lazily keeps the two packages importable in either order.
+    """
+    global _populated
+    if _populated:
+        return
+    from repro.core.baselines import (
+        AFLPolicy,
+        ExpertPolicy,
+        FavorPolicy,
+        FedMarlPolicy,
+        OortPolicy,
+        RandomPolicy,
+        TiFLPolicy,
+    )
+    from repro.core.experts import EXPERTS
+    from repro.core.fedrank import make_fedrank_variant
+
+    def fedrank(variant: str):
+        def factory(qnet=None, **kw):
+            return make_fedrank_variant(variant, qnet, **kw)
+        return factory
+
+    # setdefault: a name the user registered first wins, and a failed
+    # populate can be retried without tripping the duplicate check
+    add = _POLICIES.setdefault
+    add("fedavg", lambda **kw: RandomPolicy("fedavg", **kw))
+    add("random", lambda **kw: RandomPolicy("random", **kw))
+    add("fedprox", lambda **kw: RandomPolicy("fedprox", **kw))
+    add("afl", AFLPolicy)
+    add("tifl", TiFLPolicy)
+    add("oort", OortPolicy)
+    add("favor", FavorPolicy)
+    add("fedmarl", FedMarlPolicy)
+    add("fedrank", fedrank("full"))
+    add("fedrank-I", fedrank("no_il"))
+    add("fedrank-P", fedrank("no_rank"))
+    add("fedrank-IP", fedrank("no_il_no_rank"))
+    for expert in EXPERTS:
+        add(f"expert-{expert}", lambda _e=expert, **kw: ExpertPolicy(_e, **kw))
+    _populated = True
+
+
+def register_policy(name: str, factory: Callable[..., SelectionPolicy]) -> None:
+    """Register a policy factory under ``name`` (kwargs pass through)."""
+    if name in _POLICIES:
+        raise ValueError(f"policy {name!r} already registered")
+    _POLICIES[name] = factory
+
+
+def build_policy(name: str, **kw) -> SelectionPolicy:
+    """Construct the named policy; kwargs go to its constructor."""
+    _populate()
+    try:
+        factory = _POLICIES[name]
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; "
+                       f"registered: {available_policies()}") from None
+    return factory(**kw)
+
+
+def available_policies() -> List[str]:
+    _populate()
+    return sorted(_POLICIES)

@@ -1,21 +1,29 @@
-"""FL server: round orchestration with probing / early-exit (paper §3.1).
+"""FL server: round orchestration via RoundPlan + ClientExecutor.
 
-Round anatomy (probing policy, e.g. FedRank):
-  1. policy picks a probe set; every probe device runs ONE local epoch
-     ("probing"), reporting its 6-dim state
-     s_i = (T_comp, T_comm, E_comp, E_comm, L_i, D_i);
-  2. the policy ranks probe devices and keeps top-K — the rest EXIT EARLY
-     (their single epoch is charged via T_prob / E_prob);
-  3. the K survivors run the remaining l_ep - 1 epochs and upload updates;
+Every round is an explicit :class:`repro.fl.engine.RoundPlan` built from the
+policy by :func:`repro.fl.engine.build_round_plan`, then executed uniformly —
+there is no per-policy branching in :meth:`FLServer.run_round`:
+
+  1. PROBE  — every device in ``plan.probe_ids`` runs ``plan.probe_epochs``
+     local epochs through the executor, revealing its 6-dim state
+     s_i = (T_comp, T_comm, E_comp, E_comm, L_i, D_i).  Probing policies
+     (FedRank, FedMarl) probe ~probe_factor*K candidates; non-probing
+     baselines emit an empty probe stage and this step is skipped.
+  2. SELECT — the policy cuts the cohort to K survivors.  With a probe
+     stage, the rest EXIT EARLY (their probe epochs are charged via
+     T_prob / E_prob); without one, selection sees bookkeeping state only.
+  3. COMPLETE — survivors run ``plan.completion_epochs`` further epochs
+     through the executor (resuming from probed params when probed) and
+     upload their updates.
   4. FedAvg aggregation, global eval, reward (paper Eq. 1), policy feedback.
 
-Non-probing baselines (random / AFL / TiFL / Oort / Favor): selection happens
-before any local work and the selected devices run all l_ep epochs (vanilla
-cost model).
+Client work is delegated to a pluggable :class:`~repro.fl.engine.ClientExecutor`
+(``FLConfig.executor``): ``"sequential"`` is the reference per-client loop,
+``"vmapped"`` runs each cohort as one jitted/vmapped step (the pod-scale
+path; see ``repro.fl.engine``).
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Protocol, Sequence
 
@@ -25,14 +33,17 @@ import numpy as np
 
 from repro.data.loader import FederatedData
 from repro.fl.aggregation import fedavg
-from repro.fl.client import local_train, probing_epoch
+from repro.fl.engine import (
+    ClientExecutor,
+    ClientRequest,
+    build_round_plan,
+    make_executor,
+)
 from repro.fl.simulation import (
     DevicePool,
     RoundSystemState,
-    round_energy,
-    round_latency,
-    vanilla_round_energy,
-    vanilla_round_latency,
+    plan_round_energy,
+    plan_round_latency,
 )
 
 Params = Any
@@ -54,6 +65,7 @@ class FLConfig:
     probe_factor: float = 3.0     # probing candidate pool = probe_factor * K
     failure_rate: float = 0.0     # per-round prob a selected device drops out
     #                               (uploads nothing; its time/energy is sunk)
+    executor: str = "sequential"  # client-executor name (repro.fl.engine)
     seed: int = 0
 
 
@@ -126,10 +138,12 @@ def paper_reward(d_acc: float, r_t: float, r_e: float, t_budget: float,
 
 class FLServer:
     def __init__(self, cfg: FLConfig, task, data: FederatedData,
-                 pool: Optional[DevicePool] = None):
+                 pool: Optional[DevicePool] = None,
+                 executor: Optional[ClientExecutor] = None):
         self.cfg = cfg
         self.task = task
         self.data = data
+        self.executor = executor or make_executor(cfg.executor)
         self.pool = pool or DevicePool(cfg.n_devices, seed=cfg.seed)
         self.rng = np.random.default_rng(cfg.seed + 17)
         key = jax.random.PRNGKey(cfg.seed)
@@ -181,6 +195,15 @@ class FLServer:
             loss_age=self.loss_age.copy(),
             selection_count=self.selection_count.copy(), rng=self.rng)
 
+    def _client_data(self, i: int):
+        idx = self.data.client_indices[i]
+        return self.data.train.x[idx], self.data.train.y[idx]
+
+    def _execute(self, requests: Sequence[ClientRequest]):
+        return self.executor.run(self.task, self.global_params, requests,
+                                 lr=self.cfg.lr, batch_size=self.cfg.local_batch,
+                                 prox_mu=self.cfg.prox_mu)
+
     # ------------------------------------------------------------------
     def run_round(self, policy: SelectionPolicy) -> RoundResult:
         cfg = self.cfg
@@ -188,53 +211,57 @@ class FLServer:
         ctx = self._ctx()
         self.loss_age += 1
 
-        probe_ids = probe_states = None
-        client_results: Dict[int, Params] = {}
+        plan = build_round_plan(policy, ctx, cfg.l_ep)
+        probe_ids = np.asarray(plan.probe_ids, dtype=np.int64)
+        probe_states = None
+        probe_params: Dict[int, Params] = {}
 
-        if policy.needs_probing:
-            probe_ids = np.asarray(policy.probe_set(ctx))
-            probe_losses = np.zeros(len(probe_ids))
-            partial: Dict[int, Params] = {}
-            for j, i in enumerate(probe_ids):
-                idx = self.data.client_indices[i]
-                x, y = self.data.train.x[idx], self.data.train.y[idx]
-                p1, l1 = probing_epoch(self.task, self.global_params, x, y,
-                                       lr=cfg.lr, batch_size=cfg.local_batch,
-                                       prox_mu=cfg.prox_mu,
-                                       seed=cfg.seed + 1000 * ctx.round + int(i))
-                partial[int(i)] = p1
-                probe_losses[j] = l1
-                self.last_loss[i] = l1
-                self.loss_age[i] = 0
+        # ---- probe stage ---------------------------------------------
+        if plan.has_probe:
+            reqs = [ClientRequest(int(i), *self._client_data(int(i)),
+                                  epochs=plan.probe_epochs,
+                                  seed=cfg.seed + 1000 * ctx.round + int(i))
+                    for i in probe_ids]
+            probed = self._execute(reqs)
+            probe_params = probed.params
+            probe_losses = np.array([probed.losses[int(i)][-1] for i in probe_ids])
+            self.last_loss[probe_ids] = probe_losses
+            self.loss_age[probe_ids] = 0
             probe_states = ctx.probe_states(probe_ids, probe_losses)
-            selected = np.asarray(policy.select(ctx, probe_ids, probe_states))
-            # survivors complete the remaining epochs from their probed params
+
+        # ---- select --------------------------------------------------
+        selected = np.asarray(policy.select(
+            ctx, probe_ids if plan.has_probe else None, probe_states))
+
+        # ---- completion stage ----------------------------------------
+        if plan.has_probe:
+            missing = [int(i) for i in selected if int(i) not in probe_params]
+            if missing:
+                raise ValueError(
+                    f"policy {policy.name!r} selected devices {missing} "
+                    "outside the round's probe set")
+        if plan.completion_epochs > 0 and len(selected):
+            reqs = [ClientRequest(int(i), *self._client_data(int(i)),
+                                  epochs=plan.completion_epochs,
+                                  seed=cfg.seed + 2000 * ctx.round + int(i),
+                                  init_params=probe_params.get(int(i)))
+                    for i in selected]
+            completed = self._execute(reqs)
+            client_results: Dict[int, Params] = dict(completed.params)
             for i in selected:
-                idx = self.data.client_indices[i]
-                x, y = self.data.train.x[idx], self.data.train.y[idx]
-                p_fin, losses = local_train(
-                    self.task, partial[int(i)], x, y, epochs=cfg.l_ep - 1,
-                    lr=cfg.lr, batch_size=cfg.local_batch, prox_mu=cfg.prox_mu,
-                    seed=cfg.seed + 2000 * ctx.round + int(i))
-                client_results[int(i)] = p_fin
-                self.last_loss[i] = losses[-1] if len(losses) else self.last_loss[i]
-            r_t = round_latency(ctx.sys, probe_ids, selected, cfg.l_ep)
-            r_e = round_energy(ctx.sys, probe_ids, selected, cfg.l_ep)
+                losses = completed.losses[int(i)]
+                if len(losses):
+                    self.last_loss[i] = losses[-1]
+                    self.loss_age[i] = 0
         else:
-            selected = np.asarray(policy.select(ctx, None, None))
-            for i in selected:
-                idx = self.data.client_indices[i]
-                x, y = self.data.train.x[idx], self.data.train.y[idx]
-                p_fin, losses = local_train(
-                    self.task, self.global_params, x, y, epochs=cfg.l_ep,
-                    lr=cfg.lr, batch_size=cfg.local_batch, prox_mu=cfg.prox_mu,
-                    seed=cfg.seed + 2000 * ctx.round + int(i))
-                client_results[int(i)] = p_fin
-                self.last_loss[i] = losses[0]
-                self.loss_age[i] = 0
-            r_t = vanilla_round_latency(ctx.sys, selected, cfg.l_ep)
-            r_e = vanilla_round_energy(ctx.sys, selected, cfg.l_ep)
-            probe_ids = np.asarray([], dtype=np.int64)
+            # no completion stage (l_ep == probe_epochs): probed params final
+            client_results = {int(i): probe_params[int(i)] for i in selected
+                              if int(i) in probe_params}
+
+        r_t = plan_round_latency(ctx.sys, probe_ids, selected,
+                                 plan.probe_epochs, plan.completion_epochs)
+        r_e = plan_round_energy(ctx.sys, probe_ids, selected,
+                                plan.probe_epochs, plan.completion_epochs)
 
         # failure injection: selected devices may drop before uploading —
         # their compute/latency cost is sunk but they contribute no update
@@ -262,7 +289,7 @@ class FLServer:
             test_loss=test_loss, r_t=r_t, r_e=r_e, d_acc=d_acc, reward=reward,
             cum_time=self._cum_time, cum_energy=self._cum_energy, failed=failed)
         self.history.append(result)
-        policy.observe(ctx, result, probe_ids if policy.needs_probing else None,
+        policy.observe(ctx, result, probe_ids if plan.has_probe else None,
                        probe_states)
         return result
 

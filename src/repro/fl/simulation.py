@@ -126,40 +126,60 @@ def static_estimates(pool: "DevicePool", flops_per_epoch: np.ndarray,
     return t, e
 
 
+def plan_round_latency(state: RoundSystemState, probe_ids: np.ndarray,
+                       selected: np.ndarray, probe_epochs: int,
+                       completion_epochs: int) -> float:
+    """Unified R_T for any :class:`repro.fl.engine.RoundPlan`.
+
+    A synchronous probe barrier (max over the probe cohort, charged
+    ``probe_epochs`` compute epochs, no upload) followed by the completion
+    stage (max over selected of comms + ``completion_epochs`` compute
+    epochs).  ``probe_epochs=1, completion_epochs=l_ep-1`` is the paper's
+    probing round; ``probe_epochs=0, completion_epochs=l_ep`` the vanilla
+    non-probing round.
+    """
+    t = (float(state.t_comp[probe_ids].max()) * probe_epochs
+         if len(probe_ids) and probe_epochs else 0.0)
+    if len(selected) == 0:
+        return t
+    rest = state.t_comm[selected] + state.t_comp[selected] * completion_epochs
+    return t + float(rest.max())
+
+
+def plan_round_energy(state: RoundSystemState, probe_ids: np.ndarray,
+                      selected: np.ndarray, probe_epochs: int,
+                      completion_epochs: int) -> float:
+    """Unified R_E: probe compute energy is summed over the whole probe
+    cohort (early-exited devices' epochs are sunk); completion adds comms +
+    compute energy summed over the selected survivors."""
+    e = (float(state.e_comp[probe_ids].sum()) * probe_epochs
+         if len(probe_ids) and probe_epochs else 0.0)
+    if len(selected) == 0:
+        return e
+    rest = state.e_comm[selected] + state.e_comp[selected] * completion_epochs
+    return e + float(rest.sum())
+
+
 def round_latency(state: RoundSystemState, probe_set: np.ndarray,
                   selected: np.ndarray, l_ep: int) -> float:
     """R_T per the paper: T_prob + max over selected of
     (T_comm + T_comp * (l_ep - 1))."""
-    t_prob = float(state.t_comp[probe_set].max()) if len(probe_set) else 0.0
-    if len(selected) == 0:
-        return t_prob
-    rest = state.t_comm[selected] + state.t_comp[selected] * (l_ep - 1)
-    return t_prob + float(rest.max())
+    return plan_round_latency(state, probe_set, selected, 1, l_ep - 1)
 
 
 def round_energy(state: RoundSystemState, probe_set: np.ndarray,
                  selected: np.ndarray, l_ep: int) -> float:
     """R_E per the paper: E_prob + sum over selected of
     (E_comm + E_comp * (l_ep - 1))."""
-    e_prob = float(state.e_comp[probe_set].sum()) if len(probe_set) else 0.0
-    if len(selected) == 0:
-        return e_prob
-    rest = state.e_comm[selected] + state.e_comp[selected] * (l_ep - 1)
-    return e_prob + float(rest.sum())
+    return plan_round_energy(state, probe_set, selected, 1, l_ep - 1)
 
 
 def vanilla_round_latency(state: RoundSystemState, selected: np.ndarray,
                           l_ep: int) -> float:
     """Non-probing baseline: every selected device runs all l_ep epochs."""
-    if len(selected) == 0:
-        return 0.0
-    tot = state.t_comm[selected] + state.t_comp[selected] * l_ep
-    return float(tot.max())
+    return plan_round_latency(state, np.empty(0, np.int64), selected, 0, l_ep)
 
 
 def vanilla_round_energy(state: RoundSystemState, selected: np.ndarray,
                          l_ep: int) -> float:
-    if len(selected) == 0:
-        return 0.0
-    tot = state.e_comm[selected] + state.e_comp[selected] * l_ep
-    return float(tot.sum())
+    return plan_round_energy(state, np.empty(0, np.int64), selected, 0, l_ep)

@@ -10,7 +10,10 @@ from jax.sharding import Mesh
 
 
 def _mk(shape, axes) -> Mesh:
-    from jax.sharding import AxisType
+    try:
+        from jax.sharding import AxisType
+    except ImportError:      # older jax: meshes are Auto-typed already
+        return jax.make_mesh(shape, axes)
 
     return jax.make_mesh(shape, axes,
                          axis_types=(AxisType.Auto,) * len(axes))

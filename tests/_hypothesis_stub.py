@@ -1,0 +1,93 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The test suite uses a small, fixed subset of the hypothesis API:
+``@settings(max_examples=..., deadline=...)``, ``@given(**strategies)`` and
+the ``sampled_from`` / ``integers`` / ``booleans`` strategies.  This stub
+replays that subset with a deterministic PRNG so the property tests still
+exercise a spread of examples in environments (like the offline CI image)
+where the real library is unavailable.  ``conftest.install_hypothesis_stub``
+registers it in ``sys.modules`` only when ``import hypothesis`` fails, so
+installing the real package transparently takes over.
+"""
+from __future__ import annotations
+
+import inspect
+import random
+import sys
+import types
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng: random.Random):
+        return self._draw(rng)
+
+
+def sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda rng: options[rng.randrange(len(options))])
+
+
+def integers(min_value: int, max_value: int):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def floats(min_value: float, max_value: float):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+class settings:
+    """Decorator form only (all the suite uses); stores max_examples."""
+
+    def __init__(self, max_examples=None, deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        if self.max_examples:
+            fn._stub_max_examples = self.max_examples
+        return fn
+
+
+def given(**strategy_kw):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            rng = random.Random(0)
+            n = getattr(wrapper, "_stub_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for _ in range(n):
+                drawn = {k: s.example(rng) for k, s in strategy_kw.items()}
+                fn(*args, **drawn, **kwargs)
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        # hide the strategy-filled parameters from pytest's fixture resolution
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(parameters=[
+            p for name, p in sig.parameters.items() if name not in strategy_kw])
+        return wrapper
+
+    return deco
+
+
+def install() -> None:
+    """Register this stub as ``hypothesis`` + ``hypothesis.strategies``."""
+    if "hypothesis" in sys.modules:
+        return
+    mod = types.ModuleType("hypothesis")
+    st = types.ModuleType("hypothesis.strategies")
+    for name in ("sampled_from", "integers", "booleans", "floats"):
+        setattr(st, name, globals()[name])
+    mod.given = given
+    mod.settings = settings
+    mod.strategies = st
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = st

@@ -3,6 +3,16 @@ import sys
 
 # make src importable without install
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(__file__))
+
+# property tests use hypothesis; fall back to the bundled deterministic stub
+# in offline environments where it isn't installed
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()
 
 import jax
 import numpy as np

@@ -1,5 +1,8 @@
 """Paper Fig. 4: generalization — single-expert IL vs multi-expert IL,
-tested on an OOD environment (different sigma + fresh device pool)."""
+tested on an OOD environment (different sigma + an out-of-distribution
+fleet scenario: the low-end-heavy ``cellular-tail`` fleet with dropout and
+a round deadline, vs the ``uniform`` fleet demonstrations were collected
+in — see repro.fl.scenarios)."""
 from __future__ import annotations
 
 from benchmarks.common import build_env, emit_csv
@@ -15,10 +18,12 @@ def run(rounds: int = 20, k: int = 5, n_devices: int = 40, seed: int = 0,
         verbose: bool = True):
     # demonstrations collected in the "ID" env
     make_id, _, _ = build_env(n_devices=n_devices, k=k, rounds=rounds,
-                              sigma=0.01, seed=seed)
-    # evaluation in an OOD env (different heterogeneity + data split)
+                              sigma=0.01, seed=seed, scenario="uniform")
+    # evaluation in an OOD env (different heterogeneity + data split + an
+    # adversarial fleet scenario)
     make_ood, _, _ = build_env(n_devices=n_devices, k=k, rounds=rounds,
-                               sigma=0.1, seed=seed + 99)
+                               sigma=0.1, seed=seed + 99,
+                               scenario="cellular-tail")
     rows = []
     for experts in (("oort",), ("harmony",), ("fedmarl",),
                     ("oort", "harmony", "fedmarl")):

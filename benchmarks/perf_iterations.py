@@ -14,8 +14,9 @@ import os
 import sys
 
 # the dry-run experiments need the 512-device host platform; the FL executor
-# timing mode needs the real single CPU device — decide before jax loads
-if "--fl-executors" not in sys.argv:
+# and fleet timing modes need the real single CPU device — decide before jax
+# loads
+if "--fl-executors" not in sys.argv and "--fleet" not in sys.argv:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
@@ -152,6 +153,129 @@ def run_fl_executor_bench(ks=(4, 8, 16, 32), rounds: int = 3,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Fleet-scale DevicePool: vectorized struct-of-arrays vs seed per-object impl
+# ---------------------------------------------------------------------------
+
+
+class _LegacyDevicePool:
+    """The seed repo's per-object DevicePool, kept verbatim as the reference
+    the vectorized implementation is benchmarked against."""
+
+    _TIERS = [
+        (1.2e9, 12.5e6, 4.0e-9, 1.5e-7),
+        (3.5e8, 5.0e6, 1.0e-8, 3.0e-7),
+        (6.0e7, 1.5e6, 2.5e-8, 6.0e-7),
+    ]
+    _LOAD_LEVELS = None  # set lazily (numpy import order)
+    _LOAD_TRANS = None
+
+    def __init__(self, n_devices, seed=0, tier_probs=None):
+        import numpy as np
+        from dataclasses import dataclass
+
+        if _LegacyDevicePool._LOAD_LEVELS is None:
+            _LegacyDevicePool._LOAD_LEVELS = np.array([1.0, 0.55, 0.25])
+            _LegacyDevicePool._LOAD_TRANS = np.array([
+                [0.80, 0.15, 0.05], [0.30, 0.55, 0.15], [0.15, 0.35, 0.50]])
+
+        @dataclass
+        class _Profile:
+            speed: float
+            bandwidth: float
+            j_per_flop: float
+            j_per_byte: float
+            tier: int
+
+        self.n = n_devices
+        self.rng = np.random.default_rng(seed)
+        tier_probs = tier_probs or [0.25, 0.5, 0.25]
+        self.devices = []
+        for _ in range(n_devices):
+            t = int(self.rng.choice(len(self._TIERS), p=tier_probs))
+            sp, bw, jf, jb = self._TIERS[t]
+            jitter = lambda: float(self.rng.lognormal(0.0, 0.25))
+            self.devices.append(_Profile(
+                speed=sp * jitter(), bandwidth=bw * jitter(),
+                j_per_flop=jf * jitter(), j_per_byte=jb * jitter(), tier=t))
+        self._load_state = self.rng.integers(0, 3, size=n_devices)
+
+    def advance_round(self):
+        import numpy as np
+
+        u = self.rng.random(self.n)
+        cdf = np.cumsum(self._LOAD_TRANS[self._load_state], axis=1)
+        self._load_state = (u[:, None] > cdf).sum(axis=1)
+
+    def system_state(self, flops_per_epoch, model_bytes):
+        import numpy as np
+
+        speed = np.array([d.speed for d in self.devices])
+        bw = np.array([d.bandwidth for d in self.devices])
+        jf = np.array([d.j_per_flop for d in self.devices])
+        jb = np.array([d.j_per_byte for d in self.devices])
+        load = self._LOAD_LEVELS[self._load_state]
+        return (flops_per_epoch / (speed * load),
+                2.0 * model_bytes / bw + 2.0,
+                flops_per_epoch * jf, 2.0 * model_bytes * jb)
+
+    def static_estimates(self, flops_per_epoch, model_bytes, l_ep):
+        import numpy as np
+
+        speed = np.array([d.speed for d in self.devices])
+        bw = np.array([d.bandwidth for d in self.devices])
+        jf = np.array([d.j_per_flop for d in self.devices])
+        jb = np.array([d.j_per_byte for d in self.devices])
+        t = 2 * model_bytes / bw + 2.0 + l_ep * flops_per_epoch / speed
+        e = 2 * model_bytes * jb + l_ep * flops_per_epoch * jf
+        return t, e
+
+
+def run_fleet_bench(sizes=(10_000, 100_000), steps: int = 5, repeats: int = 3,
+                    verbose: bool = True):
+    """Build + per-round simulator work for the vectorized DevicePool vs the
+    seed per-object reference.  One "step" is what the seed server did every
+    round: advance the dynamics, rebuild the system state, and recompute the
+    static estimates (the current server caches the round-invariant
+    estimates once, so the vectorized side only pays advance+state).  Best
+    of ``repeats`` (min is the stable estimator under allocator noise)."""
+    import numpy as np
+
+    from repro.fl.simulation import DevicePool, static_estimates
+
+    rows = []
+    for n in sizes:
+        fpe = np.full(n, 1e9)
+        timings = {}
+        for name, cls in (("legacy", _LegacyDevicePool), ("vectorized", DevicePool)):
+            build_s, step_s = float("inf"), float("inf")
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                pool = cls(n, seed=0)
+                if name == "vectorized":
+                    static_estimates(pool, fpe, 1e6, 3)   # cached by the server
+                build_s = min(build_s, time.perf_counter() - t0)
+                t0 = time.perf_counter()
+                for _ in range(steps):
+                    pool.advance_round()
+                    pool.system_state(fpe, 1e6)
+                    if name == "legacy":                  # seed: every round
+                        pool.static_estimates(fpe, 1e6, 3)
+                step_s = min(step_s, (time.perf_counter() - t0) / steps)
+            timings[name] = (build_s, step_s)
+        (lb, ls), (vb, vs) = timings["legacy"], timings["vectorized"]
+        row = {"bench": "fleet_scale", "n_devices": n, "steps": steps,
+               "legacy_build_s": round(lb, 4), "vectorized_build_s": round(vb, 5),
+               "legacy_step_s": round(ls, 4), "vectorized_step_s": round(vs, 5),
+               "build_speedup": round(lb / vb, 1),
+               "step_speedup": round(ls / vs, 1),
+               "build_plus_step_speedup": round((lb + ls) / (vb + vs), 1)}
+        rows.append(row)
+        if verbose:
+            print(json.dumps(row), flush=True)
+    return rows
+
+
 def main() -> None:
     # allow_abbrev=False keeps argparse in sync with the literal sys.argv
     # check above that decides the XLA device-count flag
@@ -161,7 +285,17 @@ def main() -> None:
     ap.add_argument("--fl-executors", action="store_true",
                     help="time sequential vs vmapped FL round execution "
                          "instead of the HLO dry-run iterations")
+    ap.add_argument("--fleet", action="store_true",
+                    help="time the vectorized DevicePool against the seed "
+                         "per-object fleet at 10k/100k devices")
     args = ap.parse_args()
+    if args.fleet:
+        out = args.out or "results/fleet_scale.json"
+        results = run_fleet_bench()
+        os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+        return
     if args.fl_executors:
         out = args.out or "results/fl_executors.json"
         results = run_fl_executor_bench()

@@ -1,47 +1,116 @@
-"""Beyond-paper robustness study: device dropout mid-round.
+"""Scenario-sweep robustness benchmark: selection policies across fleets.
 
-Real deployments lose selected devices (battery, connectivity, user action).
-A dropped device's time/energy is sunk but it uploads nothing. We sweep the
-failure rate and compare FedRank (IL-pretrained) vs random selection —
-selection quality matters MORE when every surviving update is precious.
+Real deployments differ from the lab along exactly the axes the
+client-selection surveys call out: availability windows, churn, correlated
+load spikes, dropout and deadline stragglers.  This driver sweeps the named
+scenarios of :mod:`repro.fl.scenarios` and compares selection policies in
+each, emitting a full per-round perf/accuracy trajectory to
+``BENCH_scenarios.json`` (plus a CSV summary on stdout).
+
+    PYTHONPATH=src python -m benchmarks.robustness_failures            # full
+    PYTHONPATH=src python -m benchmarks.robustness_failures --quick   # smoke
+
+Quick mode (CI) runs 3 scenarios x 2 policies x 2 rounds on a tiny fleet —
+enough to catch a rotted driver, not enough to draw conclusions.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
+from typing import Dict, List, Optional, Sequence
+
 from benchmarks.common import build_env, emit_csv
-from benchmarks.table1_selection import pretrained_qnet
-from repro.core import FedRankPolicy, RandomPolicy
-from repro.fl import FLConfig, FLServer
+from repro.fl import available_scenarios, build_policy
+
+QUICK_SCENARIOS = ("uniform", "high-churn", "stragglers")
+FULL_POLICIES = ("fedavg", "oort", "fedrank")
+QUICK_POLICIES = ("fedavg", "fedrank")
 
 
-def run(rounds: int = 25, k: int = 5, n_devices: int = 40, seed: int = 0,
-        verbose: bool = True):
-    make_server, task, data = build_env(n_devices=n_devices, k=k,
-                                        rounds=rounds, sigma=0.1, seed=seed)
-    q, _ = pretrained_qnet(make_server)
+def _pretrained_qnet(make_server, quick: bool):
+    from benchmarks.table1_selection import pretrained_qnet
+
+    if quick:
+        return pretrained_qnet(make_server, rounds_per_expert=2, steps=60)
+    return pretrained_qnet(make_server)
+
+
+def run(scenarios: Optional[Sequence[str]] = None,
+        policies: Optional[Sequence[str]] = None,
+        rounds: int = 25, k: int = 5, n_devices: int = 40, seed: int = 0,
+        quick: bool = False, verbose: bool = True) -> List[Dict]:
+    if quick:
+        rounds, k, n_devices = 2, 3, 16
+        scenarios = list(scenarios or QUICK_SCENARIOS)
+        policies = list(policies or QUICK_POLICIES)
+    else:
+        scenarios = list(scenarios or available_scenarios())
+        policies = list(policies or FULL_POLICIES)
+
+    # IL demonstrations are collected once, in the uniform environment —
+    # evaluating the SAME pretrained policy across scenarios is the point
+    make_uniform, _, _ = build_env(n_devices=n_devices, k=k, rounds=rounds,
+                                   sigma=0.1, seed=seed, scenario="uniform")
+    q, _ = _pretrained_qnet(make_uniform, quick)
+
     rows = []
-    for failure_rate in (0.0, 0.2, 0.4):
-        for mkpol in (lambda: RandomPolicy(), lambda: FedRankPolicy(q, k=k)):
-            cfg = FLConfig(n_devices=n_devices, k_select=k, rounds=rounds,
-                           l_ep=3, lr=0.1, seed=5, failure_rate=failure_rate)
-            srv = FLServer(cfg, task, data)
-            pol = mkpol()
-            hist = srv.run(pol)
-            n_failed = sum(len(r.failed) for r in hist if r.failed is not None)
+    for scenario in scenarios:
+        make_server, _, _ = build_env(n_devices=n_devices, k=k, rounds=rounds,
+                                      sigma=0.1, seed=seed, scenario=scenario)
+        for name in policies:
+            kw = {"qnet": q, "k": k, "seed": seed} if name == "fedrank" else {}
+            srv = make_server(5)
+            hist = srv.run(build_policy(name, **kw))
+            trajectory = [{
+                "round": r.round,
+                "acc": round(r.acc, 4),
+                "r_t": round(r.r_t, 2),
+                "r_e": round(r.r_e, 2),
+                "cum_time_s": round(r.cum_time, 1),
+                "cum_energy_j": round(r.cum_energy, 1),
+                "n_selected": len(r.selected),
+                "n_failed": len(r.failed),
+                "n_stragglers": len(r.stragglers),
+                "n_available": r.n_available,
+            } for r in hist]
             rows.append({
-                "failure_rate": failure_rate,
-                "policy": pol.name,
+                "scenario": scenario,
+                "policy": name,
                 "final_acc": round(hist[-1].acc, 4),
-                "total_dropped": n_failed,
                 "cum_time_s": round(hist[-1].cum_time, 1),
+                "cum_energy_j": round(hist[-1].cum_energy, 1),
+                "total_failed": sum(len(r.failed) for r in hist),
+                "total_stragglers": sum(len(r.stragglers) for r in hist),
+                "mean_available": round(sum(r.n_available for r in hist)
+                                        / len(hist), 1),
+                "trajectory": trajectory,
             })
             if verbose:
-                print(rows[-1], flush=True)
+                summary = {h: rows[-1][h] for h in rows[-1] if h != "trajectory"}
+                print(summary, flush=True)
     return rows
 
 
 def main() -> None:
-    emit_csv(run(), ["failure_rate", "policy", "final_acc", "total_dropped",
-                     "cum_time_s"])
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 3 scenarios, 2 rounds, tiny fleet")
+    ap.add_argument("--scenarios", nargs="*", default=None,
+                    help=f"subset of {available_scenarios()}")
+    ap.add_argument("--rounds", type=int, default=25)
+    ap.add_argument("--out", default="BENCH_scenarios.json")
+    args = ap.parse_args()
+
+    rows = run(scenarios=args.scenarios, rounds=args.rounds, quick=args.quick)
+    out_dir = os.path.dirname(os.path.abspath(args.out))
+    os.makedirs(out_dir, exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"quick": args.quick, "results": rows}, f, indent=1)
+    print(f"wrote {args.out} ({len(rows)} runs)")
+    emit_csv(rows, ["scenario", "policy", "final_acc", "cum_time_s",
+                    "cum_energy_j", "total_failed", "total_stragglers",
+                    "mean_available"])
 
 
 if __name__ == "__main__":

@@ -45,9 +45,9 @@ def main() -> None:
     from benchmarks import variance_check
     variance_check.run(rounds=rounds)
 
-    _section("Robustness: device dropout mid-round (beyond-paper)")
+    _section("Robustness: fleet-scenario sweep (beyond-paper)")
     from benchmarks import robustness_failures
-    robustness_failures.run(rounds=max(10, rounds - 10))
+    robustness_failures.run(rounds=max(10, rounds - 10), quick=args.quick)
 
     _section("Kernel micro-bench (CPU ref timing + TPU roofline projection)")
     from benchmarks import kernel_bench

@@ -33,7 +33,7 @@ from repro.data import (
     make_lm_stream,
 )
 from repro.fl import FLConfig, FLServer, LMTask, MLPTask, available_executors, \
-    build_policy
+    available_scenarios, build_policy
 
 POLICY_NAMES = ("fedavg", "afl", "tifl", "oort", "favor", "fedmarl", "fedrank")
 
@@ -67,6 +67,10 @@ def main() -> None:
                     choices=available_executors(),
                     help="client executor: 'vmapped' runs each cohort as one "
                          "jitted step")
+    ap.add_argument("--scenario", default="uniform",
+                    choices=available_scenarios(),
+                    help="fleet environment: tier mix, load dynamics, "
+                         "availability and failures (repro.fl.scenarios)")
     args = ap.parse_args()
 
     if args.arch:
@@ -84,7 +88,8 @@ def main() -> None:
     def make_server(seed=1):
         return FLServer(FLConfig(n_devices=args.devices, k_select=args.k,
                                  rounds=args.rounds, l_ep=3, lr=lr, seed=seed,
-                                 executor=args.executor),
+                                 executor=args.executor,
+                                 scenario=args.scenario),
                         task, data)
 
     print("== collecting expert demonstrations (Alg. 1) ==")

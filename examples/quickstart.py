@@ -3,8 +3,10 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Policies are built by name from the registry (``repro.fl.build_policy``);
-the round engine is selected via ``FLConfig.executor`` — "sequential" is the
-per-client reference loop, "vmapped" runs each cohort as one jitted step.
+the fleet environment by name from the scenario registry
+(``FLConfig.scenario`` -> ``repro.fl.build_scenario``); the round engine is
+selected via ``FLConfig.executor`` — "sequential" is the per-client
+reference loop, "vmapped" runs each cohort as one jitted step.
 """
 from repro.core import augment_demonstrations, collect_demonstrations, pretrain_qnet
 from repro.data import FederatedData, dirichlet_partition, make_classification_data
@@ -17,6 +19,7 @@ task = MLPTask(dim=32, hidden=64, n_classes=10)
 
 make_server = lambda seed=1: FLServer(
     FLConfig(n_devices=30, k_select=5, rounds=15, l_ep=3, lr=0.1, seed=seed,
+             scenario="cellular-tail",  # low-end-heavy fleet, dropout + deadline
              executor="vmapped"),   # cohort-parallel rounds; "sequential" = reference
     task, data)
 

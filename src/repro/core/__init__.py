@@ -16,7 +16,7 @@ from repro.core.imitation import (
     collect_demonstrations,
     pretrain_qnet,
 )
-from repro.core.qnet import apply_qnet, init_qnet, soft_update
+from repro.core.qnet import apply_qnet, hard_update, init_qnet, soft_update
 from repro.core.ranking import (
     pairwise_bce,
     pairwise_bce_hard,
@@ -29,7 +29,7 @@ __all__ = [
     "RandomPolicy", "AFLPolicy", "TiFLPolicy", "OortPolicy", "FavorPolicy",
     "FedMarlPolicy", "ExpertPolicy", "FedRankPolicy", "make_fedrank_variant",
     "featurize", "STATE_DIM", "FEATURE_DIM",
-    "init_qnet", "apply_qnet", "soft_update",
+    "init_qnet", "apply_qnet", "soft_update", "hard_update",
     "pairwise_bce", "pairwise_bce_hard", "pairwise_soft_targets",
     "ranking_accuracy", "topk_overlap",
     "Demonstration", "collect_demonstrations", "augment_demonstrations",

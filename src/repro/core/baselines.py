@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.core import experts
 from repro.core.features import featurize
-from repro.core.qnet import apply_qnet, init_qnet, soft_update
+from repro.core.qnet import apply_qnet, hard_update, init_qnet
 from repro.fl.server import RoundContext, RoundResult
 
 
@@ -28,21 +28,23 @@ class _Base:
     needs_probing = False
 
     def probe_set(self, ctx: RoundContext) -> np.ndarray:
-        m = min(ctx.n, max(ctx.k, int(round(ctx.k * 3.0))))
-        return ctx.rng.choice(ctx.n, size=m, replace=False)
+        avail = ctx.available_ids()
+        m = min(len(avail), max(ctx.k, int(round(ctx.k * 3.0))))
+        return ctx.rng.choice(avail, size=m, replace=False)
 
     def observe(self, ctx, result, probe_ids, probe_states) -> None:
         pass
 
 
 class RandomPolicy(_Base):
-    """FedAvg / FedProx selection: uniform random K of N."""
+    """FedAvg / FedProx selection: uniform random K of N (online only)."""
 
     def __init__(self, name: str = "fedavg"):
         self.name = name
 
     def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
-        return ctx.rng.choice(ctx.n, size=ctx.k, replace=False)
+        avail = ctx.available_ids()
+        return ctx.rng.choice(avail, size=min(ctx.k, len(avail)), replace=False)
 
 
 class AFLPolicy(_Base):
@@ -57,11 +59,13 @@ class AFLPolicy(_Base):
         self.eps = eps
 
     def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
-        val = ctx.last_loss / max(ctx.last_loss.std(), 1e-9)
+        avail = ctx.available_ids()
+        val = ctx.last_loss[avail] / max(ctx.last_loss[avail].std(), 1e-9)
         p = np.exp((val - val.max()) / self.temperature)
-        p = (1 - self.eps) * p / p.sum() + self.eps / ctx.n
+        p = (1 - self.eps) * p / p.sum() + self.eps / len(avail)
         p /= p.sum()
-        return ctx.rng.choice(ctx.n, size=ctx.k, replace=False, p=p)
+        return ctx.rng.choice(avail, size=min(ctx.k, len(avail)),
+                              replace=False, p=p)
 
 
 class TiFLPolicy(_Base):
@@ -96,12 +100,14 @@ class TiFLPolicy(_Base):
         probs = probs / probs.sum()
         tier = int(ctx.rng.choice(self.n_tiers, p=probs))
         self._last_tier = tier
-        members = np.where(self.tier_of == tier)[0]
+        avail = ctx.available_ids()
+        members = avail[self.tier_of[avail] == tier]
         if len(members) < ctx.k:
-            extra = np.setdiff1d(np.arange(ctx.n), members)
+            extra = np.setdiff1d(avail, members)
             members = np.concatenate([members, extra])
         self.credits[tier] -= 1
-        return ctx.rng.choice(members, size=ctx.k, replace=False)
+        return ctx.rng.choice(members, size=min(ctx.k, len(members)),
+                              replace=False)
 
     def observe(self, ctx, result: RoundResult, probe_ids, probe_states) -> None:
         gain = max(result.d_acc, 1e-4)
@@ -127,10 +133,13 @@ class OortPolicy(_Base):
         # oort's over-participation decay + staleness exploration bonus
         util = util / np.sqrt(1.0 + ctx.selection_count)
         util = util * (1.0 + 0.1 * np.sqrt(ctx.loss_age / (1.0 + ctx.round)))
-        n_explore = int(round(self.explore_frac * ctx.k))
-        n_exploit = ctx.k - n_explore
-        chosen = list(np.argsort(-util)[:n_exploit])
-        rest = np.setdiff1d(np.arange(ctx.n), chosen)
+        avail = ctx.available_ids()
+        k = min(ctx.k, len(avail))
+        n_explore = int(round(self.explore_frac * k))
+        n_exploit = k - n_explore
+        chosen = list(avail[np.argsort(-util[avail])[:n_exploit]])
+        rest = np.setdiff1d(avail, chosen)
+        n_explore = min(n_explore, len(rest))
         if n_explore > 0:
             chosen += list(ctx.rng.choice(rest, size=n_explore, replace=False))
         return np.asarray(chosen)
@@ -167,9 +176,11 @@ class FavorPolicy(_Base):
     def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
         feats = featurize(self._bookkeeping_states(ctx))
         qs = np.asarray(apply_qnet(self.q, jnp.asarray(feats)))
+        avail = ctx.available_ids()
+        k = min(ctx.k, len(avail))
         if ctx.rng.random() < self.eps:
-            return ctx.rng.choice(ctx.n, size=ctx.k, replace=False)
-        return np.argsort(-qs)[:ctx.k]
+            return ctx.rng.choice(avail, size=k, replace=False)
+        return avail[np.argsort(-qs[avail])[:k]]
 
     def observe(self, ctx, result: RoundResult, probe_ids, probe_states) -> None:
         feats = featurize(self._bookkeeping_states(ctx))
@@ -185,7 +196,7 @@ class FavorPolicy(_Base):
             self.q = jax.tree.map(lambda p, gr: p - self.lr * gr, self.q, g)
             self._steps += 1
             if self._steps % 10 == 0:
-                self.q_target = soft_update(self.q_target, self.q, 1.0)
+                self.q_target = hard_update(self.q_target, self.q)
         self._prev = (feats, act, result.reward)
         self.eps *= self.eps_decay
 

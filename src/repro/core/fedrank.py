@@ -23,7 +23,7 @@ from repro.core.dqn import (
     pad_cohort,
 )
 from repro.core.features import featurize
-from repro.core.qnet import apply_qnet, init_qnet, soft_update
+from repro.core.qnet import apply_qnet, hard_update, init_qnet
 from repro.fl.server import RoundContext, RoundResult
 
 
@@ -75,11 +75,14 @@ class FedRankPolicy:
 
     # ------------------------------------------------------------------
     def probe_set(self, ctx: RoundContext) -> np.ndarray:
-        """Provisional candidates to probe (paper §3.1): rank ALL devices on
-        *bookkeeping* states (static estimates + last observed loss) with the
-        current Q-net, probe the top candidates plus a few explorers — the
-        probe then reveals true runtime state for the final top-K cut."""
-        m = min(ctx.n, MAX_COHORT, max(ctx.k, int(round(ctx.k * self.probe_factor))))
+        """Provisional candidates to probe (paper §3.1): rank the ONLINE
+        devices on *bookkeeping* states (static estimates + last observed
+        loss) with the current Q-net, probe the top candidates plus a few
+        explorers — the probe then reveals true runtime state for the final
+        top-K cut."""
+        avail = ctx.available_ids()
+        m = min(len(avail), MAX_COHORT,
+                max(ctx.k, int(round(ctx.k * self.probe_factor))))
         book = np.stack([
             ctx.est_t_round / 5.0, ctx.sys.t_comm,   # comm is load-independent
             ctx.est_e_round / 5.0, ctx.sys.e_comm,
@@ -89,14 +92,15 @@ class FedRankPolicy:
         # over-participation decay mirrors the experts' fairness behavior
         qs = qs - 0.05 * np.sqrt(ctx.selection_count)
         n_explore = max(1, m // 5)
-        top = list(np.argsort(-qs)[: m - n_explore])
+        top = list(avail[np.argsort(-qs[avail])[: m - n_explore]])
         # exploration probes avoid known stragglers: probing cost is
         # T_prob = max over the cohort, so one slow explorer taxes the whole
-        # round — sample explorers from the faster half of the pool
-        fast = np.where(ctx.est_t_round <= np.percentile(ctx.est_t_round, 60))[0]
+        # round — sample explorers from the faster half of the online pool
+        fast = avail[ctx.est_t_round[avail]
+                     <= np.percentile(ctx.est_t_round[avail], 60)]
         rest = np.setdiff1d(fast, top)
         if len(rest) == 0:
-            rest = np.setdiff1d(np.arange(ctx.n), top)
+            rest = np.setdiff1d(avail, top)
         if len(rest) and n_explore:
             top += list(ctx.rng.choice(rest, size=min(n_explore, len(rest)),
                                        replace=False))
@@ -140,16 +144,22 @@ class FedRankPolicy:
 
         if not self.online or len(self.replay) < max(2, self.train_batch // 2):
             return
+        step_losses, step_rl, step_rank = [], [], []
         for _ in range(self.train_steps_per_round):
             batch = batch_transitions(self.replay.sample(self.train_batch))
             (self.q, self._opt_m, self._opt_v, self._opt_t, loss, aux
              ) = self._train_step(self.q, self.q_target, self._opt_m,
                                   self._opt_v, self._opt_t, batch)
-        self.metrics["loss"].append(float(loss))
-        self.metrics["l_rl"].append(float(aux["l_rl"]))
-        self.metrics["l_rank"].append(float(aux["l_rank"]))
+            step_losses.append(float(loss))
+            step_rl.append(float(aux["l_rl"]))
+            step_rank.append(float(aux["l_rank"]))
+        # one metrics entry per round: the MEAN over this round's train steps
+        # (recording only the last step under-reported multi-step rounds)
+        self.metrics["loss"].append(float(np.mean(step_losses)))
+        self.metrics["l_rl"].append(float(np.mean(step_rl)))
+        self.metrics["l_rank"].append(float(np.mean(step_rank)))
         if self._rounds_seen % self.target_period == 0:
-            self.q_target = soft_update(self.q_target, self.q, 1.0)
+            self.q_target = hard_update(self.q_target, self.q)
 
 
 def make_fedrank_variant(variant: str, qnet_params=None, **kw) -> FedRankPolicy:

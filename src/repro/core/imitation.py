@@ -93,10 +93,16 @@ def pretrain_qnet(
     lr: float = 1e-3,
     qnet_params=None,
     objective: str = "pairwise",   # "pairwise" (paper) | "pointwise" ablation
+    rank_impl: str = "auto",       # pairwise-loss impl: auto | pallas | xla
 ) -> Tuple[Dict, Dict[str, list]]:
     """Behavioral cloning. ``objective="pairwise"`` is the paper's RankNet
     BCE over expert orderings; ``"pointwise"`` regresses the z-scored expert
-    utility with MSE (the Fig. 5d ablation axis)."""
+    utility with MSE (the Fig. 5d ablation axis).
+
+    ``rank_impl`` selects the pairwise-loss implementation: ``"auto"`` runs
+    the tiled Pallas kernel on TPU and the jnp oracle elsewhere;
+    ``"pallas"`` forces the kernel (interpret mode off-TPU — slow, used for
+    parity testing)."""
     key = jax.random.PRNGKey(seed)
     q = qnet_params if qnet_params is not None else init_qnet(key)
     rng = np.random.default_rng(seed + 1)
@@ -129,7 +135,7 @@ def pretrain_qnet(
             if objective.startswith("pointwise"):
                 return jnp.sum(jnp.square(scores - t1) * m1) / jnp.maximum(
                     jnp.sum(m1), 1.0)
-            return pairwise_bce_hard(scores, t1, m1)
+            return pairwise_bce_hard(scores, t1, m1, impl=rank_impl)
         return jax.vmap(per)(f, t, m).mean()
 
     grad_fn = jax.jit(jax.value_and_grad(loss_fn))

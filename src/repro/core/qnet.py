@@ -40,3 +40,10 @@ def apply_qnet(p: Params, feats: jnp.ndarray) -> jnp.ndarray:
 def soft_update(target: Params, online: Params, tau: float = 1.0) -> Params:
     """Periodic (tau=1) or Polyak (tau<1) target-network update."""
     return jax.tree.map(lambda t, o: (1 - tau) * t + tau * o, target, online)
+
+
+def hard_update(target: Params, online: Params) -> Params:
+    """Periodic target-network copy — ``soft_update`` with tau=1, named for
+    what it does (the signature keeps ``target`` so call sites read the
+    same either way)."""
+    return jax.tree.map(jnp.asarray, online)

@@ -10,11 +10,20 @@ trained to preserve pairwise orders:
 ``pairwise_bce`` takes *soft* target probabilities (online RL: from the
 target network); ``pairwise_bce_hard`` takes a target score vector and uses
 hard 0/1 (ties 0.5) comparisons (imitation: expert utilities).
+
+``pairwise_bce_hard`` dispatches through the tiled Pallas kernel
+(:mod:`repro.kernels.pairwise_rank`) when ``impl`` resolves to it —
+``"auto"`` picks the compiled kernel on TPU and the pure-jnp path
+elsewhere, so at fleet-scale cohorts the O(M^2) pair reduction is the
+kernel while CPU training/tests keep XLA semantics (the kernel's custom
+VJP falls back to the oracle gradient either way).
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.pairwise_rank.ops import pairwise_rank, resolve_rank_impl
 
 
 def _pair_logits(scores: jnp.ndarray) -> jnp.ndarray:
@@ -40,11 +49,16 @@ def pairwise_bce(scores: jnp.ndarray, target_probs: jnp.ndarray,
 
 
 def pairwise_bce_hard(scores: jnp.ndarray, target_scores: jnp.ndarray,
-                      mask: jnp.ndarray) -> jnp.ndarray:
-    """Hard pairwise targets from a reference score vector (expert utility)."""
-    diff = target_scores[:, None] - target_scores[None, :]
-    tgt = jnp.where(diff > 0, 1.0, jnp.where(diff < 0, 0.0, 0.5))
-    return pairwise_bce(scores, tgt, mask)
+                      mask: jnp.ndarray, impl: str = "auto") -> jnp.ndarray:
+    """Hard pairwise targets from a reference score vector (expert utility).
+
+    ``impl``: ``"auto"`` (Pallas kernel on TPU, jnp elsewhere),
+    ``"pallas"`` (force the kernel — interpret mode off-TPU), or ``"xla"``
+    (the jnp oracle).  Both paths share one definition of the objective in
+    :mod:`repro.kernels.pairwise_rank`.
+    """
+    return pairwise_rank(scores, target_scores, mask,
+                         impl=resolve_rank_impl(impl), hard=True)
 
 
 def pairwise_soft_targets(target_scores: jnp.ndarray) -> jnp.ndarray:

@@ -16,9 +16,18 @@ from repro.fl.engine import (
     register_executor,
 )
 from repro.fl.registry import available_policies, build_policy, register_policy
+from repro.fl.scenarios import (
+    ScenarioSpec,
+    available_scenarios,
+    build_scenario,
+    get_scenario,
+    register_scenario,
+)
 
 __all__ = [
     "DevicePool", "DeviceProfile", "RoundSystemState",
+    "ScenarioSpec", "build_scenario", "register_scenario", "get_scenario",
+    "available_scenarios",
     "MLPTask", "LMTask", "ClientTask",
     "local_train", "probing_epoch", "make_parallel_local_train",
     "fedavg", "weighted_delta_aggregate",

@@ -17,6 +17,15 @@ there is no per-policy branching in :meth:`FLServer.run_round`:
      upload their updates.
   4. FedAvg aggregation, global eval, reward (paper Eq. 1), policy feedback.
 
+The *environment* each round runs in is a scenario
+(:mod:`repro.fl.scenarios`, ``FLConfig.scenario``): the device fleet's tier
+mix and load dynamics, an availability model — only devices with
+``RoundContext.available[i]`` may be probed or selected (the server fails
+fast otherwise) — and a failure model that decides which selected devices
+drop mid-round or miss the round deadline.  Failed and timed-out devices'
+cost is sunk (stragglers charged up to the deadline), they upload nothing,
+and the server records no loss from them.
+
 Client work is delegated to a pluggable :class:`~repro.fl.engine.ClientExecutor`
 (``FLConfig.executor``): ``"sequential"`` is the reference per-client loop,
 ``"vmapped"`` runs each cohort as one jitted/vmapped step (the pod-scale
@@ -24,6 +33,7 @@ path; see ``repro.fl.engine``).
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Protocol, Sequence
 
@@ -39,6 +49,7 @@ from repro.fl.engine import (
     build_round_plan,
     make_executor,
 )
+from repro.fl.scenarios import build_scenario
 from repro.fl.simulation import (
     DevicePool,
     RoundSystemState,
@@ -47,6 +58,10 @@ from repro.fl.simulation import (
 )
 
 Params = Any
+
+
+def _empty_ids() -> np.ndarray:
+    return np.empty(0, dtype=np.int64)
 
 
 @dataclass
@@ -63,8 +78,9 @@ class FLConfig:
     e_budget: Optional[float] = None   # developer-preferred round energy E
     prox_mu: float = 0.0          # >0 => FedProx local objective
     probe_factor: float = 3.0     # probing candidate pool = probe_factor * K
-    failure_rate: float = 0.0     # per-round prob a selected device drops out
-    #                               (uploads nothing; its time/energy is sunk)
+    scenario: str = "uniform"     # fleet environment (repro.fl.scenarios)
+    failure_rate: float = 0.0     # extra Bernoulli dropout layered on top of
+    #                               the scenario's failure model
     executor: str = "sequential"  # client-executor name (repro.fl.engine)
     seed: int = 0
 
@@ -82,8 +98,16 @@ class RoundContext:
     data_sizes: np.ndarray           # (N,)
     last_loss: np.ndarray            # (N,) most recent observed training loss
     loss_age: np.ndarray             # (N,) rounds since last_loss was observed
+    available: np.ndarray = None     # (N,) bool: online this round (policies
+    #                                  MUST only probe/select available devices)
     selection_count: np.ndarray = None  # (N,) times each device was selected
     rng: np.random.Generator = field(repr=False, default=None)
+
+    def available_ids(self) -> np.ndarray:
+        """Ids a policy may legally probe or select this round."""
+        if self.available is None:
+            return np.arange(self.n)
+        return np.flatnonzero(self.available)
 
     def probe_states(self, ids: np.ndarray, probe_losses: np.ndarray) -> np.ndarray:
         """The paper's 6-dim state matrix (len(ids), 6) for probed devices."""
@@ -122,7 +146,11 @@ class RoundResult:
     reward: float
     cum_time: float
     cum_energy: float
-    failed: np.ndarray = None     # selected devices that dropped mid-round
+    failed: np.ndarray = field(default_factory=_empty_ids)
+    #                             selected devices that dropped mid-round
+    stragglers: np.ndarray = field(default_factory=_empty_ids)
+    #                             selected devices that missed the deadline
+    n_available: int = -1         # fleet devices online this round
 
 
 def paper_reward(d_acc: float, r_t: float, r_e: float, t_budget: float,
@@ -144,7 +172,13 @@ class FLServer:
         self.task = task
         self.data = data
         self.executor = executor or make_executor(cfg.executor)
-        self.pool = pool or DevicePool(cfg.n_devices, seed=cfg.seed)
+        self.pool = pool or build_scenario(cfg.scenario, cfg.n_devices,
+                                           seed=cfg.seed)
+        if cfg.failure_rate > 0:
+            # legacy knob: layer extra Bernoulli dropout over the scenario
+            self.pool.failures = dataclasses.replace(
+                self.pool.failures,
+                dropout=max(self.pool.failures.dropout, cfg.failure_rate))
         self.rng = np.random.default_rng(cfg.seed + 17)
         key = jax.random.PRNGKey(cfg.seed)
         self.global_params: Params = task.init(key)
@@ -155,6 +189,7 @@ class FLServer:
         self.history: List[RoundResult] = []
         self._eval_fn = jax.jit(task.accuracy)
         self._loss_fn = jax.jit(task.loss)
+        self._static_est = None   # static estimates are round-invariant
         self._cum_time = 0.0
         self._cum_energy = 0.0
         self._last_acc = self._evaluate()[0]
@@ -171,8 +206,11 @@ class FLServer:
     def _static_round_estimates(self):
         from repro.fl.simulation import static_estimates
 
-        return static_estimates(self.pool, self._flops_per_epoch(),
-                                self.task.param_bytes(), self.cfg.l_ep)
+        if self._static_est is None:
+            self._static_est = static_estimates(
+                self.pool, self._flops_per_epoch(), self.task.param_bytes(),
+                self.cfg.l_ep)
+        return self._static_est
 
     def _evaluate(self):
         te = self.data.test
@@ -192,7 +230,7 @@ class FLServer:
             round=len(self.history), n=self.cfg.n_devices, k=self.cfg.k_select,
             sys=sys, est_t_round=est_t, est_e_round=est_e,
             data_sizes=self.data_sizes, last_loss=self.last_loss.copy(),
-            loss_age=self.loss_age.copy(),
+            loss_age=self.loss_age.copy(), available=self.pool.available(),
             selection_count=self.selection_count.copy(), rng=self.rng)
 
     def _client_data(self, i: int):
@@ -203,6 +241,15 @@ class FLServer:
         return self.executor.run(self.task, self.global_params, requests,
                                  lr=self.cfg.lr, batch_size=self.cfg.local_batch,
                                  prox_mu=self.cfg.prox_mu)
+
+    def _check_available(self, ctx: RoundContext, ids: np.ndarray,
+                         policy: SelectionPolicy, stage: str) -> None:
+        """Fail fast when a policy schedules work on an offline device."""
+        offline = ids[~ctx.available[ids]]
+        if len(offline):
+            raise ValueError(
+                f"policy {policy.name!r} {stage} offline devices "
+                f"{offline.tolist()} (RoundContext.available must be respected)")
 
     # ------------------------------------------------------------------
     def run_round(self, policy: SelectionPolicy) -> RoundResult:
@@ -218,6 +265,7 @@ class FLServer:
 
         # ---- probe stage ---------------------------------------------
         if plan.has_probe:
+            self._check_available(ctx, probe_ids, policy, "probed")
             reqs = [ClientRequest(int(i), *self._client_data(int(i)),
                                   epochs=plan.probe_epochs,
                                   seed=cfg.seed + 1000 * ctx.round + int(i))
@@ -231,46 +279,55 @@ class FLServer:
 
         # ---- select --------------------------------------------------
         selected = np.asarray(policy.select(
-            ctx, probe_ids if plan.has_probe else None, probe_states))
-
-        # ---- completion stage ----------------------------------------
+            ctx, probe_ids if plan.has_probe else None, probe_states),
+            dtype=np.int64)
+        self._check_available(ctx, selected, policy, "selected")
         if plan.has_probe:
             missing = [int(i) for i in selected if int(i) not in probe_params]
             if missing:
                 raise ValueError(
                     f"policy {policy.name!r} selected devices {missing} "
                     "outside the round's probe set")
-        if plan.completion_epochs > 0 and len(selected):
+
+        # ---- failure injection (scenario's failure model) ------------
+        # Drawn before execution: who drops mid-round / misses the deadline
+        # is simulated, so the server never runs (or aggregates) their work.
+        completion_s = (ctx.sys.t_comm[selected]
+                        + ctx.sys.t_comp[selected] * plan.completion_epochs)
+        outcome = self.pool.draw_failures(self.rng, selected, completion_s)
+        lost = set(int(i) for i in outcome.lost)
+        survivors = np.asarray([i for i in selected if int(i) not in lost],
+                               dtype=np.int64)
+
+        # ---- completion stage (survivors only) -----------------------
+        if plan.completion_epochs > 0 and len(survivors):
             reqs = [ClientRequest(int(i), *self._client_data(int(i)),
                                   epochs=plan.completion_epochs,
                                   seed=cfg.seed + 2000 * ctx.round + int(i),
                                   init_params=probe_params.get(int(i)))
-                    for i in selected]
+                    for i in survivors]
             completed = self._execute(reqs)
             client_results: Dict[int, Params] = dict(completed.params)
-            for i in selected:
+            # losses recorded from survivors only: a device that dropped or
+            # timed out never uploaded, so the server never saw its loss
+            for i in survivors:
                 losses = completed.losses[int(i)]
                 if len(losses):
                     self.last_loss[i] = losses[-1]
                     self.loss_age[i] = 0
         else:
             # no completion stage (l_ep == probe_epochs): probed params final
-            client_results = {int(i): probe_params[int(i)] for i in selected
+            client_results = {int(i): probe_params[int(i)] for i in survivors
                               if int(i) in probe_params}
 
+        # stragglers' cost is sunk up to the round deadline; Bernoulli
+        # failures are charged in full (they vanish at an unknown point)
         r_t = plan_round_latency(ctx.sys, probe_ids, selected,
-                                 plan.probe_epochs, plan.completion_epochs)
+                                 plan.probe_epochs, plan.completion_epochs,
+                                 deadline_s=outcome.deadline_s)
         r_e = plan_round_energy(ctx.sys, probe_ids, selected,
-                                plan.probe_epochs, plan.completion_epochs)
-
-        # failure injection: selected devices may drop before uploading —
-        # their compute/latency cost is sunk but they contribute no update
-        failed = np.asarray([], dtype=np.int64)
-        if cfg.failure_rate > 0 and client_results:
-            drop = self.rng.random(len(selected)) < cfg.failure_rate
-            failed = np.asarray(selected)[drop]
-            for i in failed:
-                client_results.pop(int(i), None)
+                                plan.probe_epochs, plan.completion_epochs,
+                                deadline_s=outcome.deadline_s)
 
         if client_results:
             weights = [self.data_sizes[i] for i in client_results]
@@ -287,7 +344,9 @@ class FLServer:
         result = RoundResult(
             round=ctx.round, selected=selected, probe_set=probe_ids, acc=acc,
             test_loss=test_loss, r_t=r_t, r_e=r_e, d_acc=d_acc, reward=reward,
-            cum_time=self._cum_time, cum_energy=self._cum_energy, failed=failed)
+            cum_time=self._cum_time, cum_energy=self._cum_energy,
+            failed=outcome.failed, stragglers=outcome.stragglers,
+            n_available=int(ctx.available.sum()))
         self.history.append(result)
         policy.observe(ctx, result, probe_ids if plan.has_probe else None,
                        probe_states)

@@ -7,10 +7,16 @@ traces) with a parameterized model:
   low-end) with per-device compute throughput (FLOP/s), network bandwidth
   (B/s), and energy coefficients (J/FLOP, J/byte).  These spreads follow the
   ~1-2 order-of-magnitude ranges reported for real phone fleets.
-* **Dynamic runtime variation** — a per-device 3-state Markov chain
-  (idle / light / heavy interference) modulates effective compute per round,
-  emulating concurrently-running apps (the paper integrates LiveLab traces
-  for the same purpose).
+* **Dynamic runtime variation** — pluggable per-round dynamics from
+  :mod:`repro.fl.scenarios`: a load model (default: the 3-state interference
+  Markov chain), an availability model (online/offline mask with churn) and
+  a failure model (dropout + deadline stragglers).
+
+The fleet is stored struct-of-arrays: profiles are sampled ONCE as ``(N,)``
+vectors at construction and every per-round quantity is a vectorized numpy
+expression, so 100k-device fleets build and step in milliseconds (the seed
+kept a Python ``DeviceProfile`` object per device and rebuilt arrays from
+them on every ``system_state`` call — see ``perf_iterations.py --fleet``).
 
 Latency/energy of a round for device i:
     T_comp,i = flops_per_epoch_i / (speed_i * load_i)       (per local epoch)
@@ -20,8 +26,8 @@ Latency/energy of a round for device i:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional
+from dataclasses import dataclass
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -59,57 +65,108 @@ _TIERS = [
 # fixed per-round protocol overhead (handshake, scheduling), seconds
 _COMM_OVERHEAD_S = 2.0
 
-# Markov chain over interference states {1.0, 0.55, 0.25}
-_LOAD_LEVELS = np.array([1.0, 0.55, 0.25])
-_LOAD_TRANS = np.array([
-    [0.80, 0.15, 0.05],
-    [0.30, 0.55, 0.15],
-    [0.15, 0.35, 0.50],
-])
-
 
 class DevicePool:
-    """N simulated devices with static + dynamic heterogeneity."""
+    """N simulated devices with static + dynamic heterogeneity.
+
+    Struct-of-arrays: ``speed``, ``bandwidth``, ``j_per_flop``,
+    ``j_per_byte`` and ``tier`` are cached ``(N,)`` vectors sampled once at
+    construction.  Dynamics are delegated to the scenario models (see
+    :mod:`repro.fl.scenarios`); ``DevicePool(n, seed)`` with no models is
+    the ``uniform`` scenario (Markov load, always available, no failures).
+    """
 
     def __init__(self, n_devices: int, seed: int = 0,
-                 tier_probs: Optional[List[float]] = None):
+                 tier_probs: Optional[List[float]] = None, *,
+                 tiers: Optional[Sequence[Sequence[float]]] = None,
+                 load_model=None, availability=None, failures=None):
+        from repro.fl.scenarios import (          # deferred: scenarios imports us
+            AlwaysAvailable,
+            FailureModel,
+            MarkovLoad,
+        )
+
         self.n = n_devices
         self.rng = np.random.default_rng(seed)
-        tier_probs = tier_probs or [0.25, 0.5, 0.25]
-        self.devices: List[DeviceProfile] = []
-        for _ in range(n_devices):
-            t = int(self.rng.choice(len(_TIERS), p=tier_probs))
-            sp, bw, jf, jb = _TIERS[t]
-            jitter = lambda: float(self.rng.lognormal(0.0, 0.25))
-            self.devices.append(DeviceProfile(
-                speed=sp * jitter(), bandwidth=bw * jitter(),
-                j_per_flop=jf * jitter(), j_per_byte=jb * jitter(), tier=t))
-        self._load_state = self.rng.integers(0, 3, size=n_devices)
+        tier_probs = np.asarray(tier_probs if tier_probs is not None
+                                else [0.25, 0.5, 0.25], dtype=np.float64)
+        tier_table = np.asarray(tiers if tiers is not None else _TIERS,
+                                dtype=np.float64)
+        # vectorized fleet sampling: one inverse-CDF draw for tiers, one
+        # (4, N) lognormal block for the per-device jitters
+        u = self.rng.random(n_devices)
+        cdf = np.cumsum(tier_probs) / tier_probs.sum()
+        self.tier = np.minimum(np.searchsorted(cdf, u), len(tier_table) - 1)
+        base = tier_table[self.tier]                        # (N, 4)
+        # exp(sigma * z) == lognormal(0, sigma) but ~1.5x faster to draw
+        jit = np.exp(0.25 * self.rng.standard_normal((4, n_devices)))
+        self.speed = base[:, 0] * jit[0]
+        self.bandwidth = base[:, 1] * jit[1]
+        self.j_per_flop = base[:, 2] * jit[2]
+        self.j_per_byte = base[:, 3] * jit[3]
+
+        self.load_model = load_model if load_model is not None else MarkovLoad()
+        self.availability = (availability if availability is not None
+                             else AlwaysAvailable())
+        self.failures = failures if failures is not None else FailureModel()
+        self._load_state = self.load_model.init_state(n_devices, self.rng)
+        self._avail_state = self.availability.init_state(n_devices, self.rng)
         self.round_idx = 0
+        self._profiles: Optional[List[DeviceProfile]] = None
+        self._comm_cache = None   # (model_bytes, t_comm, e_comm) — comms are
+        #                           load-independent, so cache per payload size
+        self._inv_speed = 1.0 / self.speed
+
+    @property
+    def devices(self) -> List[DeviceProfile]:
+        """Per-device profile objects (compat view over the arrays)."""
+        if self._profiles is None:
+            self._profiles = [
+                DeviceProfile(float(self.speed[i]), float(self.bandwidth[i]),
+                              float(self.j_per_flop[i]), float(self.j_per_byte[i]),
+                              int(self.tier[i]))
+                for i in range(self.n)]
+        return self._profiles
 
     # ------------------------------------------------------------------
     def advance_round(self) -> None:
-        """Step every device's interference Markov chain."""
-        u = self.rng.random(self.n)
-        cdf = np.cumsum(_LOAD_TRANS[self._load_state], axis=1)
-        self._load_state = (u[:, None] > cdf).sum(axis=1)
+        """Step every device's load + availability dynamics."""
         self.round_idx += 1
+        self._load_state = self.load_model.step(self._load_state, self.rng,
+                                                self.round_idx)
+        self._avail_state = self.availability.step(self._avail_state, self.rng,
+                                                   self.round_idx)
 
     def loads(self) -> np.ndarray:
-        return _LOAD_LEVELS[self._load_state]
+        return self.load_model.loads(self._load_state, self.round_idx)
+
+    def available(self) -> np.ndarray:
+        """(N,) bool online mask for the current round.  Guaranteed at least
+        one device online (an empty round would deadlock every driver)."""
+        mask = np.asarray(self.availability.mask(self._avail_state,
+                                                 self.round_idx), dtype=bool)
+        if not mask.any():
+            mask = mask.copy()
+            mask[int(self.rng.integers(self.n))] = True
+        return mask
+
+    def draw_failures(self, rng: np.random.Generator, selected: np.ndarray,
+                      completion_s: np.ndarray):
+        """Delegate mid-round failures to the scenario's failure model."""
+        return self.failures.draw(rng, selected, completion_s)
 
     def system_state(self, flops_per_epoch: np.ndarray, model_bytes: float
                      ) -> RoundSystemState:
         """flops_per_epoch: (N,) — depends on each client's local data size."""
-        speed = np.array([d.speed for d in self.devices])
-        bw = np.array([d.bandwidth for d in self.devices])
-        jf = np.array([d.j_per_flop for d in self.devices])
-        jb = np.array([d.j_per_byte for d in self.devices])
         load = self.loads()
-        t_comp = flops_per_epoch / (speed * load)
-        t_comm = 2.0 * model_bytes / bw + _COMM_OVERHEAD_S
-        e_comp = flops_per_epoch * jf
-        e_comm = 2.0 * model_bytes * jb
+        t_comp = flops_per_epoch * self._inv_speed / load
+        if self._comm_cache is None or self._comm_cache[0] != model_bytes:
+            self._comm_cache = (
+                model_bytes,
+                2.0 * model_bytes / self.bandwidth + _COMM_OVERHEAD_S,
+                2.0 * model_bytes * self.j_per_byte)
+        _, t_comm, e_comm = self._comm_cache
+        e_comp = flops_per_epoch * self.j_per_flop
         return RoundSystemState(t_comp, t_comm, e_comp, e_comm, load)
 
 
@@ -117,18 +174,16 @@ def static_estimates(pool: "DevicePool", flops_per_epoch: np.ndarray,
                      model_bytes: float, l_ep: int):
     """Load-free (static-profile) per-device full-round latency/energy
     estimates — what a scheduler knows *before* probing."""
-    speed = np.array([d.speed for d in pool.devices])
-    bw = np.array([d.bandwidth for d in pool.devices])
-    jf = np.array([d.j_per_flop for d in pool.devices])
-    jb = np.array([d.j_per_byte for d in pool.devices])
-    t = 2 * model_bytes / bw + _COMM_OVERHEAD_S + l_ep * flops_per_epoch / speed
-    e = 2 * model_bytes * jb + l_ep * flops_per_epoch * jf
+    t = (2 * model_bytes / pool.bandwidth + _COMM_OVERHEAD_S
+         + l_ep * flops_per_epoch / pool.speed)
+    e = 2 * model_bytes * pool.j_per_byte + l_ep * flops_per_epoch * pool.j_per_flop
     return t, e
 
 
 def plan_round_latency(state: RoundSystemState, probe_ids: np.ndarray,
                        selected: np.ndarray, probe_epochs: int,
-                       completion_epochs: int) -> float:
+                       completion_epochs: int,
+                       deadline_s: Optional[float] = None) -> float:
     """Unified R_T for any :class:`repro.fl.engine.RoundPlan`.
 
     A synchronous probe barrier (max over the probe cohort, charged
@@ -137,26 +192,42 @@ def plan_round_latency(state: RoundSystemState, probe_ids: np.ndarray,
     epochs).  ``probe_epochs=1, completion_epochs=l_ep-1`` is the paper's
     probing round; ``probe_epochs=0, completion_epochs=l_ep`` the vanilla
     non-probing round.
+
+    With a ``deadline_s`` the completion stage is cut off at the deadline:
+    stragglers run up to the timeout (their cost is sunk — see
+    :class:`repro.fl.scenarios.FailureModel`) but never extend the round
+    past it.
     """
     t = (float(state.t_comp[probe_ids].max()) * probe_epochs
          if len(probe_ids) and probe_epochs else 0.0)
     if len(selected) == 0:
         return t
     rest = state.t_comm[selected] + state.t_comp[selected] * completion_epochs
+    if deadline_s is not None:
+        rest = np.minimum(rest, deadline_s)
     return t + float(rest.max())
 
 
 def plan_round_energy(state: RoundSystemState, probe_ids: np.ndarray,
                       selected: np.ndarray, probe_epochs: int,
-                      completion_epochs: int) -> float:
+                      completion_epochs: int,
+                      deadline_s: Optional[float] = None) -> float:
     """Unified R_E: probe compute energy is summed over the whole probe
     cohort (early-exited devices' epochs are sunk); completion adds comms +
-    compute energy summed over the selected survivors."""
+    compute energy summed over the selected survivors.
+
+    With a ``deadline_s``, a straggler's completion energy is charged
+    pro-rata to the fraction of its completion stage it ran before being
+    cut off (sunk cost up to the timeout, nothing beyond it)."""
     e = (float(state.e_comp[probe_ids].sum()) * probe_epochs
          if len(probe_ids) and probe_epochs else 0.0)
     if len(selected) == 0:
         return e
     rest = state.e_comm[selected] + state.e_comp[selected] * completion_epochs
+    if deadline_s is not None:
+        t_full = state.t_comm[selected] + state.t_comp[selected] * completion_epochs
+        frac = np.clip(deadline_s / np.maximum(t_full, 1e-12), 0.0, 1.0)
+        rest = rest * frac
     return e + float(rest.sum())
 
 

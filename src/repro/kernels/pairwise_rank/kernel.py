@@ -23,7 +23,7 @@ DEFAULT_BLOCK = 128
 
 
 def _kernel(s_row_ref, s_col_ref, t_row_ref, t_col_ref, m_row_ref, m_col_ref,
-            sum_ref, cnt_ref, *, block: int):
+            sum_ref, cnt_ref, *, block: int, hard: bool):
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -40,7 +40,12 @@ def _kernel(s_row_ref, s_col_ref, t_row_ref, t_col_ref, m_row_ref, m_col_ref,
     m_j = m_col_ref[0, :].astype(jnp.float32)
 
     logits = s_i[:, None] - s_j[None, :]           # (BN, BN)
-    tgt = jax.nn.sigmoid(t_i[:, None] - t_j[None, :])
+    t_diff = t_i[:, None] - t_j[None, :]
+    if hard:
+        # imitation targets: hard 0/1 orders from expert utilities (ties 0.5)
+        tgt = jnp.where(t_diff > 0, 1.0, jnp.where(t_diff < 0, 0.0, 0.5))
+    else:
+        tgt = jax.nn.sigmoid(t_diff)
     pm = m_i[:, None] * m_j[None, :]
     # knock out the diagonal on diagonal tiles
     row_ids = jax.lax.broadcasted_iota(jnp.int32, (block, block), 0) + i * block
@@ -52,14 +57,21 @@ def _kernel(s_row_ref, s_col_ref, t_row_ref, t_col_ref, m_row_ref, m_col_ref,
     cnt_ref[0, 0] += jnp.sum(pm)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block", "interpret", "hard"))
 def pairwise_rank_pallas(scores: jnp.ndarray, targets: jnp.ndarray,
                          mask: jnp.ndarray, *, block: int = DEFAULT_BLOCK,
-                         interpret: bool = True) -> jnp.ndarray:
+                         interpret: bool = None, hard: bool = False
+                         ) -> jnp.ndarray:
     """scores/targets/mask: (N,) -> scalar mean pairwise BCE.
 
     N is padded to a multiple of ``block``; padded entries carry mask 0.
+    ``hard=True`` uses hard 0/1 pair targets from the target score vector
+    (ties 0.5) — the imitation-learning objective of ``pairwise_bce_hard``.
+    ``interpret=None`` resolves to interpret mode off-TPU (the CPU/ref
+    fallback) and compiled mode on TPU.
     """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     n = scores.shape[0]
     n_pad = ((n + block - 1) // block) * block
     pad = n_pad - n
@@ -80,7 +92,7 @@ def pairwise_rank_pallas(scores: jnp.ndarray, targets: jnp.ndarray,
     out_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0))
 
     out_sum, out_cnt = pl.pallas_call(
-        functools.partial(_kernel, block=block),
+        functools.partial(_kernel, block=block, hard=hard),
         grid=grid,
         in_specs=[row_spec, col_spec, row_spec, col_spec, row_spec, col_spec],
         out_specs=[out_spec, out_spec],

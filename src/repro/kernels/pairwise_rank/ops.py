@@ -1,13 +1,21 @@
 """Public op: pairwise RankNet loss with kernel/oracle dispatch.
 
 ``impl="pallas"`` runs the TPU kernel (interpret mode on CPU);
-``impl="xla"`` runs the pure-jnp oracle (used in the FL training loop on CPU
-and as the autodiff path — the Pallas kernel is forward-only and is wired
-with a custom VJP that falls back to the oracle gradient).
+``impl="xla"`` runs the pure-jnp oracle (the autodiff path — the Pallas
+kernel is forward-only and is wired with a custom VJP that falls back to
+the oracle gradient).  ``impl="auto"`` picks the compiled kernel on TPU and
+the oracle elsewhere — the dispatch the FL training path
+(:func:`repro.core.ranking.pairwise_bce_hard`,
+:func:`repro.core.imitation.pretrain_qnet`) uses, so the O(N^2) pair
+reduction runs through the tiled kernel exactly where it pays off.
+
+``hard=True`` selects the imitation objective (hard 0/1 pair targets from
+an expert utility vector, ties 0.5) instead of the soft sigmoid targets.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -16,27 +24,45 @@ from repro.kernels.pairwise_rank.kernel import pairwise_rank_pallas
 from repro.kernels.pairwise_rank.ref import pairwise_rank_ref
 
 
-@jax.custom_vjp
+def resolve_rank_impl(impl: str = "auto") -> str:
+    """Map "auto" to the backend-appropriate implementation.
+
+    The ``REPRO_RANK_IMPL`` env var (``pallas`` | ``xla``) overrides the
+    *auto* choice only — it lets CI exercise the interpret-mode kernel path
+    without code changes, while explicit per-call requests (e.g. the
+    kernel-vs-oracle parity tests) always get what they asked for.
+    """
+    if impl == "auto":
+        impl = os.environ.get("REPRO_RANK_IMPL", "auto")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if impl not in ("pallas", "xla"):
+        raise ValueError(f"unknown pairwise-rank impl {impl!r}")
+    return impl
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def pairwise_rank_loss(scores: jnp.ndarray, targets: jnp.ndarray,
-                       mask: jnp.ndarray) -> jnp.ndarray:
-    return pairwise_rank_pallas(scores, targets, mask)
+                       mask: jnp.ndarray, hard: bool = False) -> jnp.ndarray:
+    return pairwise_rank_pallas(scores, targets, mask, hard=hard)
 
 
-def _fwd(scores, targets, mask):
-    return pairwise_rank_loss(scores, targets, mask), (scores, targets, mask)
+def _fwd(scores, targets, mask, hard):
+    return pairwise_rank_loss(scores, targets, mask, hard), (scores, targets, mask)
 
 
-def _bwd(res, g):
+def _bwd(hard, res, g):
     scores, targets, mask = res
     # oracle gradient (identical math, XLA autodiff)
-    grads = jax.grad(pairwise_rank_ref, argnums=0)(scores, targets, mask)
+    grads = jax.grad(pairwise_rank_ref, argnums=0)(scores, targets, mask, hard)
     return (g * grads, None, None)
 
 
 pairwise_rank_loss.defvjp(_fwd, _bwd)
 
 
-def pairwise_rank(scores, targets, mask, impl: str = "xla"):
-    if impl == "pallas":
-        return pairwise_rank_loss(scores, targets, mask)
-    return pairwise_rank_ref(scores, targets, mask)
+def pairwise_rank(scores, targets, mask, impl: str = "xla",
+                  hard: bool = False):
+    if resolve_rank_impl(impl) == "pallas":
+        return pairwise_rank_loss(scores, targets, mask, hard)
+    return pairwise_rank_ref(scores, targets, mask, hard=hard)

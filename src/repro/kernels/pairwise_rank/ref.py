@@ -14,13 +14,20 @@ import jax.numpy as jnp
 
 
 def pairwise_rank_ref(scores: jnp.ndarray, targets: jnp.ndarray,
-                      mask: jnp.ndarray) -> jnp.ndarray:
-    """scores/targets/mask: (N,) -> scalar mean pairwise BCE (fp32)."""
+                      mask: jnp.ndarray, hard: bool = False) -> jnp.ndarray:
+    """scores/targets/mask: (N,) -> scalar mean pairwise BCE (fp32).
+
+    ``hard=True`` replaces the soft sigmoid pair targets with hard 0/1
+    orders (ties 0.5) — the imitation objective."""
     s = scores.astype(jnp.float32)
     t = targets.astype(jnp.float32)
     m = mask.astype(jnp.float32)
     logits = s[:, None] - s[None, :]
-    tgt = jax.nn.sigmoid(t[:, None] - t[None, :])
+    t_diff = t[:, None] - t[None, :]
+    if hard:
+        tgt = jnp.where(t_diff > 0, 1.0, jnp.where(t_diff < 0, 0.0, 0.5))
+    else:
+        tgt = jax.nn.sigmoid(t_diff)
     pm = m[:, None] * m[None, :] * (1.0 - jnp.eye(s.shape[0], dtype=jnp.float32))
     bce = jnp.maximum(logits, 0.0) - logits * tgt + jnp.log1p(jnp.exp(-jnp.abs(logits)))
     return jnp.sum(bce * pm) / jnp.maximum(jnp.sum(pm), 1.0)

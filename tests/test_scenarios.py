@@ -1,0 +1,283 @@
+"""Scenario subsystem tests: registry, determinism, availability threading,
+failure/deadline accounting, vectorized DevicePool compat."""
+import numpy as np
+import pytest
+
+from repro.fl import DevicePool, FLConfig, FLServer, build_scenario
+from repro.fl.scenarios import (
+    ChurnAvailability,
+    DiurnalAvailability,
+    FailureModel,
+    ScenarioSpec,
+    available_scenarios,
+    get_scenario,
+    register_scenario,
+)
+from repro.fl.simulation import (
+    RoundSystemState,
+    plan_round_energy,
+    plan_round_latency,
+)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_scenarios_registered_and_build():
+    names = available_scenarios()
+    assert len(names) >= 5
+    for must in ("uniform", "cellular-tail", "nightly-chargers",
+                 "flash-crowd", "high-churn"):
+        assert must in names
+    for name in names:
+        pool = build_scenario(name, 64, seed=1)
+        for _ in range(3):
+            pool.advance_round()
+            st = pool.system_state(np.full(64, 1e9), 1e6)
+            assert np.all(st.t_comp > 0) and np.all(st.e_comp > 0)
+            avail = pool.available()
+            assert avail.dtype == bool and avail.any()
+
+
+def test_register_scenario_duplicate_raises():
+    spec = ScenarioSpec(name="uniform")
+    with pytest.raises(ValueError):
+        register_scenario(spec)
+    with pytest.raises(KeyError):
+        get_scenario("no-such-scenario")
+
+
+def test_build_scenario_overrides():
+    pool = build_scenario("uniform", 16, seed=0,
+                          failures=FailureModel(dropout=1.0))
+    out = pool.draw_failures(np.random.default_rng(0), np.arange(4),
+                             np.ones(4))
+    assert len(out.failed) == 4
+    # the registered spec itself is untouched
+    assert get_scenario("uniform").failures.dropout == 0.0
+
+
+# ---------------------------------------------------------------------------
+# determinism: same (spec, n, seed) -> identical fleet + dynamics replay
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["uniform", "high-churn", "nightly-chargers",
+                                  "flash-crowd"])
+def test_scenario_determinism(name):
+    a = build_scenario(name, 128, seed=7)
+    b = build_scenario(name, 128, seed=7)
+    for attr in ("speed", "bandwidth", "j_per_flop", "j_per_byte", "tier"):
+        np.testing.assert_array_equal(getattr(a, attr), getattr(b, attr))
+    for _ in range(6):
+        a.advance_round()
+        b.advance_round()
+        np.testing.assert_array_equal(a.loads(), b.loads())
+        np.testing.assert_array_equal(a.available(), b.available())
+
+
+def test_different_seeds_differ():
+    a = build_scenario("uniform", 128, seed=0)
+    b = build_scenario("uniform", 128, seed=1)
+    assert not np.array_equal(a.speed, b.speed)
+
+
+def test_device_pool_is_uniform_scenario_alias():
+    legacy = DevicePool(64, seed=3)
+    scen = build_scenario("uniform", 64, seed=3)
+    np.testing.assert_array_equal(legacy.speed, scen.speed)
+    np.testing.assert_array_equal(legacy.tier, scen.tier)
+    legacy.advance_round()
+    scen.advance_round()
+    np.testing.assert_array_equal(legacy.loads(), scen.loads())
+    # compat surface: per-device profile objects still available
+    d0 = legacy.devices[0]
+    assert d0.speed == pytest.approx(float(legacy.speed[0]))
+
+
+# ---------------------------------------------------------------------------
+# availability models
+# ---------------------------------------------------------------------------
+
+
+def test_churn_availability_mixes():
+    model = ChurnAvailability(p_drop=0.3, p_join=0.3, init_online=0.5)
+    rng = np.random.default_rng(0)
+    state = model.init_state(2000, rng)
+    seen_online = state.copy()
+    seen_offline = ~state
+    for r in range(25):
+        state = model.step(state, rng, r)
+        seen_online |= state
+        seen_offline |= ~state
+    # every device churns through both sides eventually
+    assert seen_online.mean() > 0.99 and seen_offline.mean() > 0.99
+
+
+def test_diurnal_availability_duty_cycle():
+    model = DiurnalAvailability(period=24, duty=0.4, phase_spread=0.5)
+    rng = np.random.default_rng(0)
+    state = model.init_state(500, rng)
+    fracs = [model.mask(state, r).mean() for r in range(24)]
+    assert np.mean(fracs) == pytest.approx(0.4, abs=0.05)
+
+
+def test_pool_available_never_empty():
+    pool = build_scenario("uniform", 8, seed=0,
+                          availability=DiurnalAvailability(duty=1e-9))
+    for _ in range(5):
+        pool.advance_round()
+        assert pool.available().sum() >= 1
+
+
+# ---------------------------------------------------------------------------
+# deadline / failure accounting
+# ---------------------------------------------------------------------------
+
+
+def _state(n=6):
+    return RoundSystemState(
+        t_comp=np.arange(1.0, n + 1),          # 1..n s/epoch
+        t_comm=np.full(n, 2.0),
+        e_comp=np.arange(1.0, n + 1) * 10.0,
+        e_comm=np.full(n, 5.0),
+        load=np.ones(n))
+
+
+def test_plan_latency_deadline_caps_stragglers():
+    st = _state()
+    sel = np.array([0, 5])                     # completion: 2+2*2=6, 2+6*2=14
+    none = np.empty(0, np.int64)
+    assert plan_round_latency(st, none, sel, 0, 2) == pytest.approx(14.0)
+    assert plan_round_latency(st, none, sel, 0, 2, deadline_s=8.0) == \
+        pytest.approx(8.0)
+    # deadline above the max is a no-op
+    assert plan_round_latency(st, none, sel, 0, 2, deadline_s=99.0) == \
+        pytest.approx(14.0)
+
+
+def test_plan_energy_deadline_prorates_stragglers():
+    st = _state()
+    sel = np.array([0, 5])
+    none = np.empty(0, np.int64)
+    full = plan_round_energy(st, none, sel, 0, 2)
+    assert full == pytest.approx((5 + 20.0) + (5 + 120.0))
+    # deadline 8s: device 0 (6s) unaffected; device 5 (14s) charged 8/14
+    capped = plan_round_energy(st, none, sel, 0, 2, deadline_s=8.0)
+    assert capped == pytest.approx(25.0 + 125.0 * (8.0 / 14.0))
+    assert capped < full
+
+
+def test_failure_model_draw_disjoint_and_deterministic():
+    fm = FailureModel(dropout=0.5, deadline_factor=1.2)
+    sel = np.arange(20)
+    comp = np.linspace(1.0, 40.0, 20)
+    o1 = fm.draw(np.random.default_rng(5), sel, comp)
+    o2 = fm.draw(np.random.default_rng(5), sel, comp)
+    np.testing.assert_array_equal(o1.failed, o2.failed)
+    np.testing.assert_array_equal(o1.stragglers, o2.stragglers)
+    assert not set(o1.failed) & set(o1.stragglers)
+    assert o1.deadline_s == pytest.approx(1.2 * np.median(comp))
+    assert len(o1.stragglers) > 0
+
+
+def test_straggler_charged_up_to_timeout_no_update(mlp_task, fl_data):
+    """Server integration: a tight deadline produces stragglers whose cost
+    is sunk (capped at the deadline) and who never contribute a loss or an
+    update."""
+    from repro.core import RandomPolicy
+
+    cfg = FLConfig(n_devices=20, k_select=6, rounds=6, l_ep=2, lr=0.1, seed=2)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    srv.pool.failures = FailureModel(deadline_factor=1.05)
+    baseline_loss = srv.last_loss.copy()
+    hist = srv.run(RandomPolicy())
+    all_straggled = np.concatenate([r.stragglers for r in hist]).astype(int)
+    assert len(all_straggled) > 0
+    for r in hist:
+        assert set(r.stragglers.tolist()) <= set(r.selected.tolist())
+        assert not set(r.stragglers.tolist()) & set(r.failed.tolist())
+        assert r.r_t > 0
+    # a device that ONLY ever straggled keeps its initial sentinel loss
+    uploaded = set()
+    for r in hist:
+        lost = set(r.stragglers.tolist()) | set(r.failed.tolist())
+        uploaded |= set(r.selected.tolist()) - lost
+    only_straggled = [i for i in set(all_straggled.tolist()) if i not in uploaded]
+    for i in only_straggled:
+        assert srv.last_loss[i] == pytest.approx(baseline_loss[i])
+
+
+def test_dropped_devices_leave_no_loss(mlp_task, fl_data):
+    """failure_rate=1.0: nobody uploads, so last_loss stays at the sentinel
+    and the global model is never aggregated."""
+    from repro.core import RandomPolicy
+
+    cfg = FLConfig(n_devices=20, k_select=5, rounds=3, l_ep=2, lr=0.1,
+                   seed=3, failure_rate=1.0)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    hist = srv.run(RandomPolicy())
+    assert np.allclose(srv.last_loss, 3.0)
+    assert all(len(r.failed) == len(r.selected) for r in hist)
+    assert all(r.acc == pytest.approx(hist[0].acc) for r in hist)
+
+
+def test_round_result_failed_defaults_to_empty_array():
+    from repro.fl import RoundResult
+
+    r = RoundResult(round=0, selected=np.arange(2), probe_set=np.arange(2),
+                    acc=0.5, test_loss=1.0, r_t=1.0, r_e=1.0, d_acc=0.0,
+                    reward=0.0, cum_time=1.0, cum_energy=1.0)
+    assert r.failed.dtype == np.int64 and len(r.failed) == 0
+    assert r.stragglers.dtype == np.int64 and len(r.stragglers) == 0
+
+
+# ---------------------------------------------------------------------------
+# availability threading through the server
+# ---------------------------------------------------------------------------
+
+
+class _OfflineSelector:
+    """Deliberately selects an offline device to trip the server check."""
+
+    name = "offline-selector"
+    needs_probing = False
+
+    def probe_set(self, ctx):
+        return ctx.available_ids()[: ctx.k]
+
+    def select(self, ctx, probe_ids, probe_states):
+        offline = np.flatnonzero(~ctx.available)
+        if len(offline) == 0:
+            return ctx.available_ids()[: ctx.k]
+        return offline[:1]
+
+    def observe(self, ctx, result, probe_ids, probe_states):
+        pass
+
+
+def test_server_fails_fast_on_offline_selection(mlp_task, fl_data):
+    cfg = FLConfig(n_devices=20, k_select=4, rounds=1, l_ep=1, lr=0.1,
+                   seed=0, scenario="high-churn")
+    srv = FLServer(cfg, mlp_task, fl_data)
+    with pytest.raises(ValueError, match="offline"):
+        for _ in range(10):      # churn guarantees an offline device soon
+            srv.run_round(_OfflineSelector())
+
+
+def test_policies_respect_availability(mlp_task, fl_data):
+    """Every registered policy runs clean under heavy churn (the server
+    would raise if any probed/selected an offline device)."""
+    from repro.fl import build_policy
+
+    for name in ("fedavg", "afl", "tifl", "oort", "favor", "fedmarl",
+                 "fedrank-IP"):
+        cfg = FLConfig(n_devices=20, k_select=4, rounds=3, l_ep=2, lr=0.1,
+                       seed=1, scenario="high-churn")
+        srv = FLServer(cfg, mlp_task, fl_data)
+        hist = srv.run(build_policy(name))
+        for r in hist:
+            assert len(r.selected) <= cfg.k_select
+            assert r.n_available <= cfg.n_devices

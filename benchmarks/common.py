@@ -15,9 +15,13 @@ def build_env(n_devices: int = 40, k: int = 5, rounds: int = 25, l_ep: int = 3,
               sigma: Optional[float] = 0.1, n_samples: int = 12000,
               seed: int = 0, prox_mu: float = 0.0,
               alpha: float = 2.0, beta: float = 2.0,
-              executor: str = "sequential", scenario: str = "uniform"):
+              executor: str = "sequential", scenario: str = "uniform",
+              mode: str = "sync", async_concurrency: int = 0,
+              staleness: str = "constant", buffer_size: int = 0):
     """Returns (make_server, task, data). sigma=None -> IID.  ``scenario``
-    names the fleet environment (see repro.fl.scenarios)."""
+    names the fleet environment (see repro.fl.scenarios); ``mode="async"``
+    selects the buffered asynchronous engine (repro.fl.async_engine) with
+    the given concurrency/staleness knobs."""
     train, test = make_classification_data(n_samples=n_samples, seed=seed)
     if sigma is None:
         parts = iid_partition(len(train.y), n_devices, seed=seed, size_skew=0.8)
@@ -30,7 +34,9 @@ def build_env(n_devices: int = 40, k: int = 5, rounds: int = 25, l_ep: int = 3,
         cfg = FLConfig(n_devices=n_devices, k_select=k, rounds=rounds,
                        l_ep=l_ep, lr=0.1, seed=run_seed, prox_mu=prox_mu,
                        alpha=alpha, beta=beta, executor=executor,
-                       scenario=scenario)
+                       scenario=scenario, mode=mode,
+                       async_concurrency=async_concurrency,
+                       staleness=staleness, buffer_size=buffer_size)
         return FLServer(cfg, task, data)
 
     return make_server, task, data

@@ -4,19 +4,24 @@
 MUST run in its own process (sets the 512-device flag):
     PYTHONPATH=src python -m benchmarks.perf_iterations --out results/perf.json
 
-FL round-engine mode (real CPU timing, so NO 512-device flag):
+FL round-engine modes (real CPU timing, so NO 512-device flag):
     PYTHONPATH=src python -m benchmarks.perf_iterations --fl-executors
+    PYTHONPATH=src python -m benchmarks.perf_iterations --fl-modes [--quick]
 
-compares the sequential reference ClientExecutor against the vmapped
-pod-scale executor on wall-clock time per FL round across cohort sizes.
+``--fl-executors`` compares the sequential reference ClientExecutor against
+the vmapped pod-scale executor on wall-clock time per FL round across
+cohort sizes; ``--fl-modes`` compares the synchronous barrier engine
+against the asynchronous buffered engine on simulated
+wall-clock-to-accuracy per scenario (see docs/benchmarks.md).
 """
 import os
 import sys
 
-# the dry-run experiments need the 512-device host platform; the FL executor
-# and fleet timing modes need the real single CPU device — decide before jax
-# loads
-if "--fl-executors" not in sys.argv and "--fleet" not in sys.argv:
+# the dry-run experiments need the 512-device host platform; the FL executor,
+# FL mode and fleet timing modes need the real single CPU device — decide
+# before jax loads
+if ("--fl-executors" not in sys.argv and "--fleet" not in sys.argv
+        and "--fl-modes" not in sys.argv):
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
@@ -147,6 +152,64 @@ def run_fl_executor_bench(ks=(4, 8, 16, 32), rounds: int = 3,
                "sequential_exec_s": round(per_stage["sequential"], 4),
                "vmapped_exec_s": round(per_stage["vmapped"], 4),
                "exec_speedup": round(per_stage["sequential"] / per_stage["vmapped"], 2)}
+        rows.append(row)
+        if verbose:
+            print(json.dumps(row), flush=True)
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# FL round-regime comparison: sync barrier vs async buffered aggregation
+# ---------------------------------------------------------------------------
+
+
+def run_fl_modes_bench(scenarios=("uniform", "high-churn"), quick: bool = False,
+                       verbose: bool = True):
+    """Simulated wall-clock-to-accuracy of the synchronous barrier engine vs
+    the asynchronous buffered engine (buffer=K, concurrency=3K, polynomial
+    staleness) per scenario.  The sync run fixes the accuracy target (its
+    final accuracy); the async run reports when it crosses that target on
+    its virtual clock.  ``--quick`` shrinks everything to a CI smoke."""
+    from repro.data import FederatedData, dirichlet_partition, \
+        make_classification_data
+    from repro.fl import FLConfig, FLServer, MLPTask, build_policy
+
+    n_devices, k, l_ep = (16, 3, 2) if quick else (20, 4, 2)
+    sync_rounds = 2 if quick else 20
+    async_aggs = 4 if quick else 60
+    train, test = make_classification_data(
+        n_samples=2000 if quick else 4000, seed=0)
+    parts = dirichlet_partition(train.y, n_devices, 0.1, seed=0)
+    data = FederatedData(train, test, parts)
+    task = MLPTask(dim=32, hidden=32, n_classes=10)
+
+    rows = []
+    for scenario in scenarios:
+        kw = dict(n_devices=n_devices, k_select=k, l_ep=l_ep, lr=0.1,
+                  seed=0, scenario=scenario)
+        srv_sync = FLServer(FLConfig(rounds=sync_rounds, **kw), task, data)
+        hist_sync = srv_sync.run(build_policy("fedavg"))
+        target = hist_sync[-1].acc
+        t_sync = hist_sync[-1].cum_time
+
+        srv_async = FLServer(FLConfig(rounds=async_aggs, mode="async",
+                                      async_concurrency=3 * k,
+                                      staleness="polynomial", **kw),
+                             task, data)
+        hist_async = srv_async.run(build_policy("fedavg"))
+        hit = next((r for r in hist_async if r.acc >= target), None)
+        row = {"bench": "fl_round_modes", "scenario": scenario,
+               "k": k, "l_ep": l_ep, "sync_rounds": sync_rounds,
+               "target_acc": round(target, 4),
+               "sync_time_s": round(t_sync, 1),
+               "async_toa_s": round(hit.cum_time, 1) if hit else "n/a",
+               "async_aggs_to_target": hit.round if hit else "n/a",
+               "async_final_acc": round(hist_async[-1].acc, 4),
+               "async_speedup": (round(t_sync / hit.cum_time, 2)
+                                 if hit else "n/a"),
+               "async_mean_staleness": round(
+                   sum(r.mean_staleness for r in hist_async)
+                   / len(hist_async), 2)}
         rows.append(row)
         if verbose:
             print(json.dumps(row), flush=True)
@@ -285,10 +348,22 @@ def main() -> None:
     ap.add_argument("--fl-executors", action="store_true",
                     help="time sequential vs vmapped FL round execution "
                          "instead of the HLO dry-run iterations")
+    ap.add_argument("--fl-modes", action="store_true",
+                    help="compare sync vs async round regimes on simulated "
+                         "wall-clock-to-accuracy per scenario")
+    ap.add_argument("--quick", action="store_true",
+                    help="shrink --fl-modes to a CI smoke")
     ap.add_argument("--fleet", action="store_true",
                     help="time the vectorized DevicePool against the seed "
                          "per-object fleet at 10k/100k devices")
     args = ap.parse_args()
+    if args.fl_modes:
+        out = args.out or "results/fl_modes.json"
+        results = run_fl_modes_bench(quick=args.quick)
+        os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(results, f, indent=1)
+        return
     if args.fleet:
         out = args.out or "results/fleet_scale.json"
         results = run_fleet_bench()

@@ -4,14 +4,20 @@ Real deployments differ from the lab along exactly the axes the
 client-selection surveys call out: availability windows, churn, correlated
 load spikes, dropout and deadline stragglers.  This driver sweeps the named
 scenarios of :mod:`repro.fl.scenarios` and compares selection policies in
-each, emitting a full per-round perf/accuracy trajectory to
-``BENCH_scenarios.json`` (plus a CSV summary on stdout).
+each — under BOTH round regimes (``--modes sync async``): the synchronous
+barrier engine and the asynchronous buffered engine
+(:mod:`repro.fl.async_engine`, FedBuff-style staleness-weighted
+aggregation, concurrency 3x the buffer size).  It emits a full per-round /
+per-aggregation perf/accuracy trajectory to ``BENCH_scenarios.json`` (plus
+a CSV summary on stdout); ``benchmarks/table1_by_scenario.py`` reduces
+those trajectories to per-scenario ToA/EoA tables.
 
     PYTHONPATH=src python -m benchmarks.robustness_failures            # full
     PYTHONPATH=src python -m benchmarks.robustness_failures --quick   # smoke
 
 Quick mode (CI) runs 3 scenarios x 2 policies x 2 rounds on a tiny fleet —
-enough to catch a rotted driver, not enough to draw conclusions.
+enough to catch a rotted driver, not enough to draw conclusions.  Async
+quick rows cover ``uniform`` and ``high-churn`` only.
 """
 from __future__ import annotations
 
@@ -24,8 +30,13 @@ from benchmarks.common import build_env, emit_csv
 from repro.fl import available_scenarios, build_policy
 
 QUICK_SCENARIOS = ("uniform", "high-churn", "stragglers")
+QUICK_ASYNC_SCENARIOS = ("uniform", "high-churn")
 FULL_POLICIES = ("fedavg", "oort", "fedrank")
 QUICK_POLICIES = ("fedavg", "fedrank")
+MODES = ("sync", "async")
+# async engine knobs used throughout the sweep: stream the buffer full from
+# 3x concurrency, damp stale updates polynomially
+ASYNC_KW = dict(mode="async", staleness="polynomial")
 
 
 def _pretrained_qnet(make_server, quick: bool):
@@ -38,6 +49,7 @@ def _pretrained_qnet(make_server, quick: bool):
 
 def run(scenarios: Optional[Sequence[str]] = None,
         policies: Optional[Sequence[str]] = None,
+        modes: Optional[Sequence[str]] = None,
         rounds: int = 25, k: int = 5, n_devices: int = 40, seed: int = 0,
         quick: bool = False, verbose: bool = True) -> List[Dict]:
     if quick:
@@ -47,6 +59,7 @@ def run(scenarios: Optional[Sequence[str]] = None,
     else:
         scenarios = list(scenarios or available_scenarios())
         policies = list(policies or FULL_POLICIES)
+    modes = list(modes or MODES)
 
     # IL demonstrations are collected once, in the uniform environment —
     # evaluating the SAME pretrained policy across scenarios is the point
@@ -56,39 +69,54 @@ def run(scenarios: Optional[Sequence[str]] = None,
 
     rows = []
     for scenario in scenarios:
-        make_server, _, _ = build_env(n_devices=n_devices, k=k, rounds=rounds,
-                                      sigma=0.1, seed=seed, scenario=scenario)
-        for name in policies:
-            kw = {"qnet": q, "k": k, "seed": seed} if name == "fedrank" else {}
-            srv = make_server(5)
-            hist = srv.run(build_policy(name, **kw))
-            trajectory = [{
-                "round": r.round,
-                "acc": round(r.acc, 4),
-                "r_t": round(r.r_t, 2),
-                "r_e": round(r.r_e, 2),
-                "cum_time_s": round(r.cum_time, 1),
-                "cum_energy_j": round(r.cum_energy, 1),
-                "n_selected": len(r.selected),
-                "n_failed": len(r.failed),
-                "n_stragglers": len(r.stragglers),
-                "n_available": r.n_available,
-            } for r in hist]
-            rows.append({
-                "scenario": scenario,
-                "policy": name,
-                "final_acc": round(hist[-1].acc, 4),
-                "cum_time_s": round(hist[-1].cum_time, 1),
-                "cum_energy_j": round(hist[-1].cum_energy, 1),
-                "total_failed": sum(len(r.failed) for r in hist),
-                "total_stragglers": sum(len(r.stragglers) for r in hist),
-                "mean_available": round(sum(r.n_available for r in hist)
-                                        / len(hist), 1),
-                "trajectory": trajectory,
-            })
-            if verbose:
-                summary = {h: rows[-1][h] for h in rows[-1] if h != "trajectory"}
-                print(summary, flush=True)
+        for mode in modes:
+            if quick and mode == "async" and scenario not in QUICK_ASYNC_SCENARIOS:
+                continue
+            env_kw = dict(ASYNC_KW, async_concurrency=3 * k) if mode == "async" \
+                else {}
+            # async runs get 2x the aggregation budget: aggregations are
+            # cheaper than barrier rounds, and the ToA reduction needs the
+            # async trajectory to cross the sync target
+            n_steps = rounds if mode == "sync" or quick else 2 * rounds
+            make_server, _, _ = build_env(n_devices=n_devices, k=k,
+                                          rounds=n_steps, sigma=0.1,
+                                          seed=seed, scenario=scenario,
+                                          **env_kw)
+            for name in policies:
+                kw = {"qnet": q, "k": k, "seed": seed} if name == "fedrank" else {}
+                srv = make_server(5)
+                hist = srv.run(build_policy(name, **kw))
+                trajectory = [{
+                    "round": r.round,
+                    "acc": round(r.acc, 4),
+                    "r_t": round(r.r_t, 2),
+                    "r_e": round(r.r_e, 2),
+                    "cum_time_s": round(r.cum_time, 1),
+                    "cum_energy_j": round(r.cum_energy, 1),
+                    "n_selected": len(r.selected),
+                    "n_failed": len(r.failed),
+                    "n_stragglers": len(r.stragglers),
+                    "n_available": r.n_available,
+                    "mean_staleness": round(r.mean_staleness, 2),
+                    "n_pending": r.n_pending,
+                } for r in hist]
+                rows.append({
+                    "scenario": scenario,
+                    "mode": mode,
+                    "policy": name,
+                    "final_acc": round(hist[-1].acc, 4),
+                    "cum_time_s": round(hist[-1].cum_time, 1),
+                    "cum_energy_j": round(hist[-1].cum_energy, 1),
+                    "total_failed": sum(len(r.failed) for r in hist),
+                    "total_stragglers": sum(len(r.stragglers) for r in hist),
+                    "mean_available": round(sum(r.n_available for r in hist)
+                                            / len(hist), 1),
+                    "trajectory": trajectory,
+                })
+                if verbose:
+                    summary = {h: rows[-1][h] for h in rows[-1]
+                               if h != "trajectory"}
+                    print(summary, flush=True)
     return rows
 
 
@@ -98,17 +126,20 @@ def main() -> None:
                     help="CI smoke: 3 scenarios, 2 rounds, tiny fleet")
     ap.add_argument("--scenarios", nargs="*", default=None,
                     help=f"subset of {available_scenarios()}")
+    ap.add_argument("--modes", nargs="*", default=None, choices=MODES,
+                    help="round regimes to sweep (default: both)")
     ap.add_argument("--rounds", type=int, default=25)
     ap.add_argument("--out", default="BENCH_scenarios.json")
     args = ap.parse_args()
 
-    rows = run(scenarios=args.scenarios, rounds=args.rounds, quick=args.quick)
+    rows = run(scenarios=args.scenarios, modes=args.modes,
+               rounds=args.rounds, quick=args.quick)
     out_dir = os.path.dirname(os.path.abspath(args.out))
     os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
         json.dump({"quick": args.quick, "results": rows}, f, indent=1)
     print(f"wrote {args.out} ({len(rows)} runs)")
-    emit_csv(rows, ["scenario", "policy", "final_acc", "cum_time_s",
+    emit_csv(rows, ["scenario", "mode", "policy", "final_acc", "cum_time_s",
                     "cum_energy_j", "total_failed", "total_stragglers",
                     "mean_available"])
 

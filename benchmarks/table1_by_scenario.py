@@ -1,0 +1,116 @@
+"""Per-scenario Table 1: ToA/EoA reduction of the scenario-sweep trajectories.
+
+The paper's Table 1 ranks selection policies by time- and energy-to-target-
+accuracy in ONE environment.  The scenario sweep
+(``benchmarks/robustness_failures.py`` -> ``BENCH_scenarios.json``) already
+records full per-round trajectories for every (scenario, mode, policy)
+triple; this driver reduces them to a per-scenario Table 1, showing how each
+policy's ToA/EoA ranking shifts with the environment — and, where async rows
+exist, how much simulated wall-clock the buffered asynchronous engine saves
+over the synchronous barrier at the same accuracy target.
+
+    PYTHONPATH=src python -m benchmarks.robustness_failures   # produce input
+    PYTHONPATH=src python -m benchmarks.table1_by_scenario    # reduce
+
+The accuracy target per scenario is ``target_frac`` (default 0.95, the
+Table 1 convention) of the *synchronous fedavg* final accuracy in that
+scenario, so sync and async rows of one scenario share a target and their
+ToA values are directly comparable.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List, Optional
+
+from benchmarks.common import emit_csv
+
+HEADER = ["scenario", "mode", "policy", "target_acc", "final_acc", "toa_s",
+          "eoa_J", "round_at_target", "speedup_vs_fedavg", "energy_vs_fedavg"]
+
+
+def _first_crossing(trajectory: List[Dict], target: float):
+    """(cum_time, cum_energy, round) at the first trajectory point whose
+    accuracy reaches ``target`` (None, None, None when never reached)."""
+    for point in trajectory:
+        if point["acc"] >= target:
+            return point["cum_time_s"], point["cum_energy_j"], point["round"]
+    return None, None, None
+
+
+def reduce_rows(results: List[Dict], target_frac: float = 0.95) -> List[Dict]:
+    """One output row per (scenario, mode, policy) with ToA/EoA against the
+    scenario's shared target and ratios against the same-mode fedavg."""
+    by_key = {(r["scenario"], r.get("mode", "sync"), r["policy"]): r
+              for r in results}
+    scenarios = sorted({r["scenario"] for r in results})
+    out = []
+    for scenario in scenarios:
+        base = (by_key.get((scenario, "sync", "fedavg"))
+                or next((r for r in results if r["scenario"] == scenario
+                         and r["policy"] == "fedavg"), None))
+        if base is None:
+            continue
+        target = round(target_frac * base["final_acc"], 4)
+        modes = sorted({m for (s, m, _p) in by_key if s == scenario})
+        for mode in modes:
+            fed = by_key.get((scenario, mode, "fedavg"))
+            t_fed, e_fed, _ = (_first_crossing(fed["trajectory"], target)
+                               if fed else (None, None, None))
+            for (s, m, policy), row in sorted(by_key.items()):
+                if s != scenario or m != mode:
+                    continue
+                toa, eoa, rnd = _first_crossing(row["trajectory"], target)
+                out.append({
+                    "scenario": scenario, "mode": mode, "policy": policy,
+                    "target_acc": target,
+                    "final_acc": row["final_acc"],
+                    "toa_s": toa if toa is not None else "n/a",
+                    "eoa_J": eoa if eoa is not None else "n/a",
+                    "round_at_target": rnd if rnd is not None else "n/a",
+                    "speedup_vs_fedavg": (round(t_fed / toa, 2)
+                                          if toa and t_fed else "n/a"),
+                    "energy_vs_fedavg": (round(eoa / e_fed, 3)
+                                         if eoa and e_fed else "n/a"),
+                })
+    return out
+
+
+def run(bench_path: str = "BENCH_scenarios.json",
+        target_frac: float = 0.95, verbose: bool = True,
+        out: Optional[str] = None) -> List[Dict]:
+    try:
+        with open(bench_path) as f:
+            payload = json.load(f)
+    except FileNotFoundError:
+        raise SystemExit(
+            f"{bench_path} not found — generate it first:\n"
+            "    PYTHONPATH=src python -m benchmarks.robustness_failures")
+    if payload.get("quick"):
+        print("# NOTE: input was produced with --quick (2 rounds, tiny "
+              "fleet) — rankings are smoke-level only")
+    rows = reduce_rows(payload["results"], target_frac=target_frac)
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {out} ({len(rows)} rows)")
+    if verbose:
+        emit_csv(rows, HEADER)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default="BENCH_scenarios.json",
+                    help="scenario-sweep output to reduce")
+    ap.add_argument("--target-frac", type=float, default=0.95,
+                    help="accuracy target as a fraction of sync fedavg's "
+                         "final accuracy per scenario")
+    ap.add_argument("--out", default=None,
+                    help="optionally also write the reduced table as JSON")
+    args = ap.parse_args()
+    run(args.bench, target_frac=args.target_frac, out=args.out)
+
+
+if __name__ == "__main__":
+    main()

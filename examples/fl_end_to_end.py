@@ -71,6 +71,11 @@ def main() -> None:
                     choices=available_scenarios(),
                     help="fleet environment: tier mix, load dynamics, "
                          "availability and failures (repro.fl.scenarios)")
+    ap.add_argument("--mode", default="sync", choices=("sync", "async"),
+                    help="round regime: synchronous barrier rounds, or "
+                         "asynchronous buffered aggregation (3x-K "
+                         "concurrency, polynomial staleness weighting; "
+                         "repro.fl.async_engine)")
     args = ap.parse_args()
 
     if args.arch:
@@ -85,15 +90,22 @@ def main() -> None:
         task = MLPTask(dim=32, hidden=64, n_classes=10)
         lr = 0.1
 
-    def make_server(seed=1):
+    async_kw = ({"mode": "async", "async_concurrency": 3 * args.k,
+                 "staleness": "polynomial"} if args.mode == "async" else {})
+
+    def make_server(seed=1, **overrides):
+        kw = {**async_kw, **overrides}
         return FLServer(FLConfig(n_devices=args.devices, k_select=args.k,
                                  rounds=args.rounds, l_ep=3, lr=lr, seed=seed,
                                  executor=args.executor,
-                                 scenario=args.scenario),
+                                 scenario=args.scenario, **kw),
                         task, data)
 
     print("== collecting expert demonstrations (Alg. 1) ==")
-    demos = collect_demonstrations(make_server, rounds_per_expert=8)
+    # IL demonstrations are always collected synchronously (the experts'
+    # teacher signal is a full-round cohort); only online FL honors --mode
+    demos = collect_demonstrations(lambda seed=1: make_server(seed, mode="sync"),
+                                   rounds_per_expert=8)
     demos = augment_demonstrations(demos, n_synthetic=150)
     qnet, il = pretrain_qnet(demos, steps=800)
     print(f"IL: {len(demos)} demos, ranking acc {il['rank_acc'][-1]:.3f}, "

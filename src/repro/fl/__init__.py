@@ -1,9 +1,16 @@
 from repro.fl.simulation import DevicePool, DeviceProfile, RoundSystemState
 from repro.fl.tasks import MLPTask, LMTask, ClientTask
 from repro.fl.client import local_train, probing_epoch, make_parallel_local_train
-from repro.fl.aggregation import fedavg, weighted_delta_aggregate
+from repro.fl.aggregation import (
+    buffered_aggregate,
+    fedavg,
+    staleness_weight,
+    weighted_delta_aggregate,
+)
 from repro.fl.server import FLServer, FLConfig, RoundResult
+from repro.fl.async_engine import AsyncJob, AsyncRoundEngine
 from repro.fl.engine import (
+    AsyncDispatchExecutor,
     ClientExecutor,
     ClientRequest,
     ExecutionResult,
@@ -11,6 +18,7 @@ from repro.fl.engine import (
     SequentialExecutor,
     VmappedExecutor,
     available_executors,
+    build_requests,
     build_round_plan,
     make_executor,
     register_executor,
@@ -31,10 +39,12 @@ __all__ = [
     "MLPTask", "LMTask", "ClientTask",
     "local_train", "probing_epoch", "make_parallel_local_train",
     "fedavg", "weighted_delta_aggregate",
+    "staleness_weight", "buffered_aggregate",
     "FLServer", "FLConfig", "RoundResult",
-    "RoundPlan", "build_round_plan",
+    "AsyncRoundEngine", "AsyncJob",
+    "RoundPlan", "build_round_plan", "build_requests",
     "ClientExecutor", "ClientRequest", "ExecutionResult",
-    "SequentialExecutor", "VmappedExecutor",
+    "SequentialExecutor", "VmappedExecutor", "AsyncDispatchExecutor",
     "make_executor", "register_executor", "available_executors",
     "build_policy", "register_policy", "available_policies",
 ]

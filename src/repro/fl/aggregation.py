@@ -1,4 +1,12 @@
-"""Server-side aggregation rules."""
+"""Server-side aggregation rules.
+
+Synchronous rounds use :func:`fedavg` (data-size-weighted parameter
+average).  The asynchronous engine aggregates a *buffer* of updates that
+started from different global-model versions, so each update is additionally
+scaled by a staleness weight of its version lag
+(:func:`staleness_weight`, FedBuff/FedAsync-style) before being merged by
+:func:`buffered_aggregate`.
+"""
 from __future__ import annotations
 
 from typing import Any, List, Sequence
@@ -8,6 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 Params = Any
+
+STALENESS_KINDS = ("constant", "polynomial", "hinge")
 
 
 def fedavg(client_params: Sequence[Params], weights: Sequence[float]) -> Params:
@@ -22,6 +32,58 @@ def fedavg(client_params: Sequence[Params], weights: Sequence[float]) -> Params:
         return acc.astype(leaves[0].dtype)
 
     return jax.tree.map(combine, *client_params)
+
+
+def staleness_weight(lag, kind: str = "constant", a: float = 0.5,
+                     b: int = 4) -> np.ndarray:
+    """s(lag) in (0, 1]: how much an update dispatched ``lag`` global-model
+    versions ago still counts.
+
+    * ``constant``   — s = 1 (staleness ignored; FedBuff's unweighted mean)
+    * ``polynomial`` — s = (1 + lag)^-a  (FedAsync's polynomial decay)
+    * ``hinge``      — s = 1 while lag <= b, then 1 / (1 + a * (lag - b))
+                       (FedAsync's hinge: tolerate small lags, decay beyond)
+    """
+    lag = np.asarray(lag, dtype=np.float64)
+    if kind == "constant":
+        return np.ones_like(lag)
+    if kind == "polynomial":
+        return (1.0 + lag) ** (-a)
+    if kind == "hinge":
+        return np.where(lag <= b, 1.0, 1.0 / (1.0 + a * np.maximum(lag - b, 0.0)))
+    raise ValueError(f"unknown staleness kind {kind!r}; "
+                     f"expected one of {STALENESS_KINDS}")
+
+
+def buffered_aggregate(global_params: Params,
+                       client_params: Sequence[Params],
+                       data_weights: Sequence[float],
+                       lags: Sequence[int],
+                       kind: str = "constant", a: float = 0.5,
+                       b: int = 4) -> Params:
+    """Staleness-weighted merge of a buffer of async updates.
+
+    Each update i carries coefficient ``c_i = w_i * s(lag_i)`` where ``w_i``
+    is its normalized data weight and ``s`` the staleness weight; the new
+    global model is ``(1 - sum(c)) * global + sum(c_i * p_i)`` — i.e. the
+    mass a stale update loses stays with the current global model (a very
+    stale buffer barely moves it).  With ``kind="constant"`` every ``s_i``
+    is 1, the global term vanishes, and the merge reduces *exactly* to
+    :func:`fedavg` of the buffer — the sync/async parity anchor.
+    """
+    s = staleness_weight(np.asarray(lags), kind=kind, a=a, b=b)
+    w = np.asarray(data_weights, np.float64)
+    coef = (w / w.sum()) * s
+    if kind == "constant":
+        return fedavg(client_params, data_weights)
+
+    def combine(g, *leaves):
+        acc = g.astype(jnp.float32) * (1.0 - coef.sum())
+        for ci, leaf in zip(coef, leaves):
+            acc = acc + leaf.astype(jnp.float32) * ci
+        return acc.astype(g.dtype)
+
+    return jax.tree.map(combine, global_params, *client_params)
 
 
 def weighted_delta_aggregate(global_params: Params,

@@ -1,0 +1,411 @@
+"""Asynchronous round engine: buffered, staleness-weighted aggregation.
+
+The synchronous path (:meth:`repro.fl.server.FLServer.run_round`) is a
+barrier: every round waits for the slowest selected device (or its
+deadline), and a device that goes offline mid-round forfeits its work as
+sunk cost.  The scenario subsystem knows *exactly* when devices come and go
+(:mod:`repro.fl.scenarios` availability models), so this module trains
+through those gaps instead of around them — the FedBuff/FedAsync recipe:
+
+* a **virtual clock** over the scenario's availability windows.  One
+  scenario round spans ``tick_s`` simulated seconds; the clock jumps
+  straight between *events* (job completions and availability transitions —
+  ``DevicePool.next_transition`` says when the mask can next change) rather
+  than stepping tick by tick.  Skipped rounds lose no fidelity: the pool's
+  load/availability dynamics are replayed up to the current tick whenever
+  the engine consults them (:meth:`AsyncRoundEngine._sync_pool`);
+* **dispatch on arrival** — whenever concurrency slots are free and
+  online+idle devices exist, the policy selects a wave of devices which
+  immediately start local training from the *current* global model
+  (version-stamped).  Probing policies probe inside the wave exactly as in
+  the sync engine;
+* **pause/resume over availability gaps** — a running job whose device
+  goes offline stops consuming time and energy and resumes where it left
+  off when the device returns: crossing a gap costs wall-clock, never sunk
+  work (contrast the sync deadline's sunk straggler cost);
+* **buffered aggregation** — completed updates enter a buffer; every
+  ``buffer_size`` arrivals the server merges them with
+  :func:`repro.fl.aggregation.buffered_aggregate`, weighting each update by
+  data size x a pluggable staleness weight (``constant`` / ``polynomial`` /
+  ``hinge``) of its model-version lag.  "Round" and "aggregation" decouple:
+  metrics are recorded per aggregation, wall-clock is the absolute virtual
+  clock (overlapping work is NOT summed), and energy is charged per job as
+  it completes (pro-rata for mid-job dropouts).
+
+Reduction anchor: with ``buffer_size = concurrency = K``, an
+always-available scenario and ``constant`` weighting, every wave is
+dispatched at one version, fully arrives, and aggregates — the engine
+replays the synchronous engine's selection draws, per-client seeds (shared
+:func:`repro.fl.engine.build_requests` strides) and FedAvg merge, producing
+an identical global model (``tests/test_async_engine.py``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.fl.aggregation import buffered_aggregate
+from repro.fl.engine import (
+    COMPLETE_SEED_STRIDE,
+    PROBE_SEED_STRIDE,
+    build_requests,
+    build_round_plan,
+)
+
+Params = Any
+
+_EPS = 1e-9          # event-time slop: treat |dt| < _EPS as "now"
+
+
+@dataclass
+class AsyncJob:
+    """One device's in-flight work item on the virtual clock."""
+
+    cid: int
+    version: int              # global-model version at dispatch
+    seq: int                  # global dispatch order (stable merge order)
+    cycle: int                # dispatch-wave index (seed base)
+    duration_s: float         # total *active* seconds of work
+    energy_j: float           # energy if run to completion
+    params: Optional[Params]  # None => probe-only job (never uploads)
+    loss: float               # final local-epoch loss (revealed on upload)
+    fail_at_s: float          # active seconds until mid-job dropout (inf)
+    elapsed_s: float = 0.0    # active seconds done so far
+
+    @property
+    def end_s(self) -> float:
+        """Active seconds at which this job leaves its device."""
+        return min(self.duration_s, self.fail_at_s)
+
+
+class AsyncRoundEngine:
+    """Event loop driving one :class:`~repro.fl.server.FLServer` in
+    asynchronous mode.  Mutates the server's global model / bookkeeping and
+    appends per-aggregation :class:`~repro.fl.server.RoundResult` records to
+    ``server.history`` so every downstream consumer (benchmarks, ToA/EoA
+    reductions) reads async runs unchanged."""
+
+    def __init__(self, server, policy):
+        from repro.fl.aggregation import STALENESS_KINDS
+
+        self.srv = server
+        self.policy = policy
+        cfg = server.cfg
+        self.buffer_size = cfg.buffer_size or cfg.k_select
+        self.concurrency = cfg.async_concurrency or self.buffer_size
+        if self.concurrency < self.buffer_size:
+            raise ValueError(
+                f"async_concurrency ({self.concurrency}) must be >= "
+                f"buffer_size ({self.buffer_size}) — fewer outstanding "
+                "updates than the buffer needs means no aggregation can "
+                "ever trigger")
+        if cfg.staleness not in STALENESS_KINDS:
+            raise ValueError(f"unknown staleness kind {cfg.staleness!r}; "
+                             f"expected one of {STALENESS_KINDS}")
+        est_t, _ = server._static_round_estimates()
+        self.tick_s = cfg.async_tick_s or float(np.median(est_t))
+
+        self.now = 0.0
+        self.version = 0
+        self.cycle = 0
+        self._seq = 0
+        self.jobs: Dict[int, AsyncJob] = {}
+        self.buffer: List[AsyncJob] = []
+        self._time_offset = server._cum_time   # absolute clock across runs
+
+        # scenario clock: pool round r maps to [r*tick, (r+1)*tick) relative
+        # to the engine's start round
+        self.srv.pool.advance_round()
+        self._start_round = self.srv.pool.round_idx
+        self._mask = self.srv.pool.available()
+        self._next_trans = self.srv.pool.next_transition()
+
+        self._last_agg_t = 0.0
+        self._energy_since_agg = 0.0
+        self._failed_since_agg: List[int] = []
+        self._last_observe = (None, None, None)   # (ctx, probe_ids, states)
+
+    # ------------------------------------------------------------------
+    # scenario clock
+    # ------------------------------------------------------------------
+    def _sync_pool(self) -> None:
+        """Lazily fast-forward the scenario dynamics to the virtual clock's
+        current round (one round per ``tick_s``).  Load and availability
+        only influence decisions made *at events* — job durations/energies
+        are sampled at dispatch, the mask at dispatch and pause/resume time
+        — so replaying the skipped rounds on demand keeps full dynamics
+        fidelity (Markov load keeps stepping, flash crowds keep spiking)
+        while the clock still jumps straight between events."""
+        r = self._start_round + int(self.now / self.tick_s + 1e-9)
+        if r > self.srv.pool.round_idx:
+            self.srv.pool.advance_to(r)
+            self._mask = self.srv.pool.available()
+            self._next_trans = self.srv.pool.next_transition()
+
+    # ------------------------------------------------------------------
+    # dispatch
+    # ------------------------------------------------------------------
+    def _slots_used(self) -> int:
+        """Outstanding *upload-bound* updates: in-flight training jobs plus
+        completed-but-unmerged buffer entries.  A concurrency slot is held
+        from dispatch until the update is MERGED (FedBuff's M outstanding
+        clients) — which is also what makes the buffer_size=K reduction a
+        true barrier (no mid-wave refill).  Probe-only scouts (1 epoch, no
+        upload) keep their device busy but do NOT hold a slot."""
+        return (sum(1 for j in self.jobs.values() if j.params is not None)
+                + len(self.buffer))
+
+    def _dispatch(self) -> bool:
+        """Run one selection wave if slots and online+idle devices exist."""
+        srv, cfg = self.srv, self.srv.cfg
+        self._sync_pool()
+        free = self.concurrency - self._slots_used()
+        if free <= 0:
+            return False
+        idle_online = self._mask.copy()
+        if self.jobs:
+            idle_online[list(self.jobs)] = False
+        if self.buffer:
+            idle_online[[j.cid for j in self.buffer]] = False
+        n_idle = int(idle_online.sum())
+        if n_idle == 0:
+            return False
+
+        k = min(free, n_idle, cfg.k_select)
+        ctx = srv._ctx(k=k, available=idle_online, round_idx=self.cycle)
+        srv.loss_age += 1
+        plan = build_round_plan(self.policy, ctx, cfg.l_ep)
+        probe_ids = np.asarray(plan.probe_ids, dtype=np.int64)
+        probe_states = None
+        probe_params: Dict[int, Params] = {}
+
+        if plan.has_probe:
+            srv._check_available(ctx, probe_ids, self.policy, "probed")
+            reqs = build_requests(probe_ids, srv._client_data,
+                                  plan.probe_epochs, seed=cfg.seed,
+                                  round_idx=self.cycle,
+                                  stride=PROBE_SEED_STRIDE)
+            probed = srv._execute(reqs)
+            probe_params = probed.params
+            probe_losses = np.array([probed.losses[int(i)][-1]
+                                     for i in probe_ids])
+            srv.last_loss[probe_ids] = probe_losses
+            srv.loss_age[probe_ids] = 0
+            probe_states = ctx.probe_states(probe_ids, probe_losses)
+
+        selected = np.asarray(self.policy.select(
+            ctx, probe_ids if plan.has_probe else None, probe_states),
+            dtype=np.int64)
+        srv._check_available(ctx, selected, self.policy, "selected")
+        if plan.has_probe:
+            missing = [int(i) for i in selected if int(i) not in probe_params]
+            if missing:
+                raise ValueError(
+                    f"policy {self.policy.name!r} selected devices {missing} "
+                    "outside the wave's probe set")
+
+        # local training runs NOW (results are a pure function of the
+        # dispatch-time global model); the virtual clock decides when each
+        # result *lands*.  One batched executor call per wave.
+        losses: Dict[int, np.ndarray] = {}
+        if plan.completion_epochs > 0 and len(selected):
+            reqs = build_requests(selected, srv._client_data,
+                                  plan.completion_epochs, seed=cfg.seed,
+                                  round_idx=self.cycle,
+                                  stride=COMPLETE_SEED_STRIDE,
+                                  init_params=probe_params)
+            completed = srv._execute(reqs)
+            params = completed.params
+            losses = completed.losses
+        else:
+            params = {int(i): probe_params[int(i)] for i in selected}
+
+        # per-device timing/energy from the dispatch-time system state;
+        # probing waves pay a probe barrier (selection needs every probe
+        # loss) before the completion work starts
+        sys = ctx.sys
+        barrier = (float(sys.t_comp[probe_ids].max()) * plan.probe_epochs
+                   if plan.has_probe else 0.0)
+        sel_set = set(int(i) for i in selected)
+        for i in probe_ids:                    # early exits: probe-only cost
+            i = int(i)
+            if i in sel_set:
+                continue
+            self._add_job(i, duration=float(sys.t_comp[i]) * plan.probe_epochs,
+                          energy=float(sys.e_comp[i]) * plan.probe_epochs,
+                          params=None, loss=float(srv.last_loss[i]),
+                          fail_at=np.inf)
+
+        # mid-job dropout (the scenario failure model's Bernoulli channel;
+        # the deadline channel has no meaning without a round barrier)
+        p_drop = srv.pool.failures.dropout
+        drop = (srv.rng.random(len(selected)) < p_drop if p_drop > 0
+                else np.zeros(len(selected), bool))
+        for j, i in enumerate(selected):
+            i = int(i)
+            dur = (barrier + float(sys.t_comm[i])
+                   + float(sys.t_comp[i]) * plan.completion_epochs)
+            en = (float(sys.e_comp[i]) * plan.probe_epochs * plan.has_probe
+                  + float(sys.e_comm[i])
+                  + float(sys.e_comp[i]) * plan.completion_epochs)
+            fail_at = float(srv.rng.random() * dur) if drop[j] else np.inf
+            loss_arr = losses.get(i, np.zeros(0))
+            loss = float(loss_arr[-1]) if len(loss_arr) else float(srv.last_loss[i])
+            self._add_job(i, duration=dur, energy=en, params=params[i],
+                          loss=loss, fail_at=fail_at)
+        srv.selection_count[selected] += 1
+        self._last_observe = (ctx, probe_ids if plan.has_probe else None,
+                              probe_states)
+        self.cycle += 1
+        # a wave that scheduled no work must not report progress, or the
+        # event loop would spin dispatching empty waves forever
+        return len(selected) > 0 or len(probe_ids) > 0
+
+    def _add_job(self, cid: int, *, duration: float, energy: float, params,
+                 loss: float, fail_at: float) -> None:
+        self.jobs[cid] = AsyncJob(cid=cid, version=self.version,
+                                  seq=self._seq, cycle=self.cycle,
+                                  duration_s=max(duration, _EPS),
+                                  energy_j=energy, params=params, loss=loss,
+                                  fail_at_s=fail_at)
+        self._seq += 1
+
+    # ------------------------------------------------------------------
+    # event loop
+    # ------------------------------------------------------------------
+    def _trans_time(self) -> Optional[float]:
+        if self._next_trans is None:
+            return None
+        return (self._next_trans - self._start_round) * self.tick_s
+
+    def _next_event_dt(self) -> Optional[float]:
+        """Seconds until the next job completion/failure or availability
+        transition (None = no future event exists)."""
+        dts = [job.end_s - job.elapsed_s for job in self.jobs.values()
+               if self._mask[job.cid]]
+        t_trans = self._trans_time()
+        if t_trans is not None:
+            dts.append(t_trans - self.now)
+        if not dts:
+            return None
+        return max(min(dts), 0.0)
+
+    def _advance(self, dt: float) -> None:
+        self.now += dt
+        for job in self.jobs.values():
+            if self._mask[job.cid]:
+                job.elapsed_s += dt
+
+    def _process_events(self) -> None:
+        # availability transition: fast-forward the scenario dynamics and
+        # refresh the mask (paused jobs resume / running jobs pause for free)
+        self._sync_pool()
+
+        for job in [j for j in self.jobs.values()
+                    if j.elapsed_s >= j.end_s - _EPS]:
+            del self.jobs[job.cid]
+            if job.fail_at_s < job.duration_s:        # mid-job dropout
+                frac = job.fail_at_s / job.duration_s
+                self._charge(job.energy_j * frac)
+                self._failed_since_agg.append(job.cid)
+                continue
+            self._charge(job.energy_j)
+            if job.params is None:                    # probe-only early exit
+                continue
+            self.srv.last_loss[job.cid] = job.loss
+            self.srv.loss_age[job.cid] = 0
+            self.buffer.append(job)
+
+    def _charge(self, joules: float) -> None:
+        self._energy_since_agg += joules
+        self.srv._cum_energy += joules
+
+    # ------------------------------------------------------------------
+    # aggregation
+    # ------------------------------------------------------------------
+    def _aggregate(self):
+        from repro.fl.server import RoundResult, paper_reward
+
+        srv, cfg = self.srv, self.srv.cfg
+        self.buffer.sort(key=lambda j: j.seq)
+        take, self.buffer = (self.buffer[:self.buffer_size],
+                             self.buffer[self.buffer_size:])
+        lags = np.array([self.version - j.version for j in take])
+        weights = [float(srv.data_sizes[j.cid]) for j in take]
+        srv.global_params = buffered_aggregate(
+            srv.global_params, [j.params for j in take], weights, lags,
+            kind=cfg.staleness, a=cfg.staleness_a, b=cfg.staleness_b)
+        self.version += 1
+
+        acc, test_loss = srv._evaluate()
+        d_acc = acc - srv._last_acc
+        srv._last_acc = acc
+        r_t = self.now - self._last_agg_t
+        r_e = self._energy_since_agg
+        reward = paper_reward(d_acc, r_t, r_e, srv.t_budget, srv.e_budget,
+                              cfg.alpha, cfg.beta)
+        srv._cum_time = self._time_offset + self.now
+        result = RoundResult(
+            round=len(srv.history),
+            selected=np.array([j.cid for j in take], dtype=np.int64),
+            probe_set=np.empty(0, np.int64), acc=acc, test_loss=test_loss,
+            r_t=r_t, r_e=r_e, d_acc=d_acc, reward=reward,
+            cum_time=srv._cum_time, cum_energy=srv._cum_energy,
+            failed=np.asarray(sorted(self._failed_since_agg), dtype=np.int64),
+            n_available=int(self._mask.sum()),
+            mean_staleness=float(lags.mean()), max_staleness=int(lags.max()),
+            n_pending=len(self.jobs))
+        srv.history.append(result)
+        self._last_agg_t = self.now
+        self._energy_since_agg = 0.0
+        self._failed_since_agg = []
+        # one observe per dispatch wave: consumed on use so back-to-back
+        # merges with no wave in between don't double-feed the same
+        # probe-state transition to learning policies
+        ctx, probe_ids, probe_states = self._last_observe
+        if ctx is not None:
+            self._last_observe = (None, None, None)
+            self.policy.observe(ctx, result, probe_ids, probe_states)
+        return result
+
+    # ------------------------------------------------------------------
+    def run(self, aggregations: int, verbose: bool = False):
+        """Drive the event loop until ``aggregations`` buffer merges have
+        been applied; returns the per-aggregation history slice."""
+        srv = self.srv
+        start = len(srv.history)
+        done = 0
+        max_events = 1000 * aggregations + 100_000   # runaway-loop backstop
+        for _ in range(max_events):
+            # 1. drain full buffers (a merge may free the model for the
+            #    next wave, so this must precede dispatch)
+            while len(self.buffer) >= self.buffer_size and done < aggregations:
+                res = self._aggregate()
+                done += 1
+                if verbose:
+                    print(f"[{self.policy.name}] agg {res.round:3d} "
+                          f"acc={res.acc:.4f} t={res.cum_time:9.1f}s "
+                          f"E={res.cum_energy:9.1f}J "
+                          f"lag={res.mean_staleness:.1f} "
+                          f"pending={res.n_pending}")
+            if done >= aggregations:
+                break
+            # 2. fill free concurrency slots (loop back: there may be
+            #    several waves' worth of idle devices)
+            if self._dispatch():
+                continue
+            # 3. otherwise jump the clock to the next event
+            dt = self._next_event_dt()
+            if dt is None:
+                raise RuntimeError(
+                    "async engine stalled: no running jobs, no dispatchable "
+                    "devices and no future availability transition "
+                    f"(t={self.now:.1f}s, {len(self.jobs)} paused jobs)")
+            self._advance(dt)
+            self._process_events()
+        else:
+            raise RuntimeError(f"async engine exceeded {max_events} events "
+                               f"after {done}/{aggregations} aggregations")
+        return srv.history[start:]

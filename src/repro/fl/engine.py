@@ -22,8 +22,16 @@ work is executed:
   matching global models.
 
 Executors are looked up by name (``FLConfig.executor``) through a small
-registry so new execution backends (async, remote, failure-injecting) plug
-in without touching the server.
+registry so new execution backends (remote, failure-injecting) plug in
+without touching the server.  Asynchrony is NOT an executor: executors
+decide *how a batch of client work computes*, while the asynchronous engine
+(:mod:`repro.fl.async_engine`, ``FLConfig.mode="async"``) decides *when*
+each client's work starts, pauses and aggregates on a virtual clock.  The
+registry's ``"async"`` entry is a convenience alias
+(:class:`AsyncDispatchExecutor`) that flips the server into async mode
+while delegating the actual batch compute to an inner executor; both
+engines build their work items through the shared dispatch interface
+(:func:`build_requests`).
 """
 from __future__ import annotations
 
@@ -114,6 +122,34 @@ class ExecutionResult:
 
     params: Dict[int, Params] = field(default_factory=dict)
     losses: Dict[int, np.ndarray] = field(default_factory=dict)
+
+
+# Seed strides for per-client local-training RNG: stage seeds are
+# ``cfg.seed + stride * round + client_id`` so probe and completion stages
+# of the same round never collide.  The async engine uses the SAME strides
+# keyed by its aggregation-cycle index, which is what makes its
+# buffer_size=K reduction bit-compatible with the synchronous path.
+PROBE_SEED_STRIDE = 1000
+COMPLETE_SEED_STRIDE = 2000
+
+
+def build_requests(ids: Sequence[int], client_data: Callable[[int], tuple],
+                   epochs: int, *, seed: int, round_idx: int, stride: int,
+                   init_params: Optional[Dict[int, Params]] = None
+                   ) -> List[ClientRequest]:
+    """Shared dispatch interface: one :class:`ClientRequest` per client id.
+
+    ``client_data(i) -> (x, y)`` supplies each client's shard;
+    ``init_params`` (id -> params) overrides the global starting point for
+    clients that resume from probed state.  Both the synchronous server and
+    the asynchronous engine build their stages through this function, so the
+    two paths cannot drift in seeds or request shape.
+    """
+    init = init_params or {}
+    return [ClientRequest(int(i), *client_data(int(i)), epochs=epochs,
+                          seed=seed + stride * round_idx + int(i),
+                          init_params=init.get(int(i)))
+            for i in ids]
 
 
 class ClientExecutor(Protocol):
@@ -262,6 +298,32 @@ class VmappedExecutor:
         return jax.tree.map(lambda a: jax.device_put(a, spec), p0)
 
 
+class AsyncDispatchExecutor:
+    """Registry alias selecting the asynchronous engine.
+
+    ``FLConfig(executor="async")`` is shorthand for
+    ``FLConfig(mode="async")``: the server spots this executor's name and
+    drives rounds through :class:`repro.fl.async_engine.AsyncRoundEngine`
+    instead of the synchronous barrier loop.  Batch compute inside each
+    dispatch wave is delegated to ``inner`` (default:
+    :class:`SequentialExecutor`; pass ``inner="vmapped"`` to run each wave
+    as one jitted step).
+    """
+
+    name = "async"
+
+    def __init__(self, inner=None, **kw):
+        if inner is None or isinstance(inner, str):
+            self.inner = make_executor(inner or "sequential", **kw)
+        else:
+            self.inner = inner
+
+    def run(self, task, global_params, requests, *, lr, batch_size, prox_mu
+            ) -> ExecutionResult:
+        return self.inner.run(task, global_params, requests, lr=lr,
+                              batch_size=batch_size, prox_mu=prox_mu)
+
+
 # ---------------------------------------------------------------------------
 # Executor registry
 # ---------------------------------------------------------------------------
@@ -290,3 +352,4 @@ def available_executors() -> List[str]:
 
 register_executor("sequential", SequentialExecutor)
 register_executor("vmapped", VmappedExecutor)
+register_executor("async", AsyncDispatchExecutor)

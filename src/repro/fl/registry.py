@@ -21,6 +21,14 @@ Registered names (see :func:`available_policies`):
   ``qnet=...`` for the IL-pretrained variants)
 * ``expert-oort``, ``expert-harmony``, ``expert-fedmarl`` — the analytical
   IL teachers wrapped as probing policies
+
+Every registered policy runs under BOTH round regimes (``FLConfig.mode``):
+the synchronous barrier loop calls it once per round over the full fleet,
+while the asynchronous engine (:mod:`repro.fl.async_engine`) calls it once
+per dispatch wave with ``ctx.k`` sized to the free concurrency slots and
+``ctx.available`` restricted to online AND idle devices — policies must not
+assume ``ctx.k == FLConfig.k_select`` or that cohorts are disjoint across
+observations.
 """
 from __future__ import annotations
 

@@ -13,7 +13,14 @@ A :class:`ScenarioSpec` composes those axes declaratively:
   usage-trace replay, :class:`FlashCrowdLoad` — correlated usage spikes);
 * **availability** — a per-round online/offline mask with churn
   (:class:`AlwaysAvailable`, :class:`ChurnAvailability`,
-  :class:`DiurnalAvailability` — the "nightly chargers" pattern);
+  :class:`DiurnalAvailability` — the "nightly chargers" pattern).  The
+  mask is a *contract*: ``FLServer`` threads it through
+  ``RoundContext.available`` and fails fast when a policy probes or
+  selects an offline device.  Availability models also expose
+  ``next_transition(state, round_idx)`` — the next round at which the
+  mask may change (``None`` = never) — so the asynchronous engine
+  (:mod:`repro.fl.async_engine`) can jump its virtual clock between
+  availability events instead of stepping round by round;
 * **failures** — what happens to *selected* devices mid-round
   (:class:`FailureModel`: Bernoulli dropout + deadline-based straggler
   timeout with sunk-cost accounting in
@@ -157,6 +164,9 @@ class AlwaysAvailable:
     def mask(self, state, round_idx: int) -> np.ndarray:
         return state
 
+    def next_transition(self, state, round_idx: int) -> Optional[int]:
+        return None                      # the mask never changes
+
 
 @dataclass(frozen=True)
 class ChurnAvailability:
@@ -176,6 +186,10 @@ class ChurnAvailability:
 
     def mask(self, state, round_idx: int) -> np.ndarray:
         return state
+
+    def next_transition(self, state, round_idx: int) -> Optional[int]:
+        # stochastic churn: the mask may flip on every step
+        return round_idx + 1
 
 
 @dataclass(frozen=True)
@@ -197,6 +211,16 @@ class DiurnalAvailability:
     def mask(self, state, round_idx: int) -> np.ndarray:
         t = (round_idx / self.period + state) % 1.0
         return t < self.duty
+
+    def next_transition(self, state, round_idx: int) -> Optional[int]:
+        """Exact next round at which any device enters/leaves its charging
+        window (the mask is deterministic and ``period``-periodic, so a full
+        period with no change means it never changes)."""
+        cur = self.mask(state, round_idx)
+        for r in range(round_idx + 1, round_idx + self.period + 1):
+            if not np.array_equal(self.mask(state, r), cur):
+                return r
+        return None
 
 
 # ---------------------------------------------------------------------------

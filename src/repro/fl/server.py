@@ -30,6 +30,15 @@ Client work is delegated to a pluggable :class:`~repro.fl.engine.ClientExecutor`
 (``FLConfig.executor``): ``"sequential"`` is the reference per-client loop,
 ``"vmapped"`` runs each cohort as one jitted/vmapped step (the pod-scale
 path; see ``repro.fl.engine``).
+
+Rounds come in two control-flow regimes (``FLConfig.mode``):
+``"sync"`` is the barrier loop above; ``"async"``
+(:class:`repro.fl.async_engine.AsyncRoundEngine`, or the ``"async"``
+executor alias) dispatches work the moment devices come online, buffers
+completed updates, and merges every ``buffer_size`` arrivals with
+staleness weighting — :meth:`FLServer.run` routes to
+:meth:`FLServer.run_async` and history records one entry per *aggregation*
+with the absolute virtual clock as ``cum_time``.
 """
 from __future__ import annotations
 
@@ -44,8 +53,11 @@ import numpy as np
 from repro.data.loader import FederatedData
 from repro.fl.aggregation import fedavg
 from repro.fl.engine import (
+    COMPLETE_SEED_STRIDE,
+    PROBE_SEED_STRIDE,
     ClientExecutor,
     ClientRequest,
+    build_requests,
     build_round_plan,
     make_executor,
 )
@@ -82,6 +94,23 @@ class FLConfig:
     failure_rate: float = 0.0     # extra Bernoulli dropout layered on top of
     #                               the scenario's failure model
     executor: str = "sequential"  # client-executor name (repro.fl.engine)
+    mode: str = "sync"            # round regime: "sync" barrier loop or
+    #                               "async" buffered aggregation
+    #                               (repro.fl.async_engine)
+    buffer_size: int = 0          # async: aggregate every B arrivals
+    #                               (0 => k_select)
+    async_concurrency: int = 0    # async: max outstanding updates — in
+    #                               flight + completed-but-unmerged (probe
+    #                               scouts don't hold slots).  0 =>
+    #                               buffer_size; raise above it to overlap
+    #                               waves and stream the buffer full
+    #                               (must be >= buffer_size)
+    staleness: str = "constant"   # async update weighting vs model-version
+    #                               lag: constant | polynomial | hinge
+    staleness_a: float = 0.5      # polynomial exponent / hinge decay slope
+    staleness_b: int = 4          # hinge: lag tolerated before decay
+    async_tick_s: float = 0.0     # seconds of virtual clock per scenario
+    #                               round (0 => median static round latency)
     seed: int = 0
 
 
@@ -151,6 +180,11 @@ class RoundResult:
     stragglers: np.ndarray = field(default_factory=_empty_ids)
     #                             selected devices that missed the deadline
     n_available: int = -1         # fleet devices online this round
+    # --- async-mode fields (one record per *aggregation*; defaults keep
+    #     synchronous construction unchanged) ---
+    mean_staleness: float = 0.0   # mean model-version lag of merged updates
+    max_staleness: int = 0        # worst lag in the merged buffer
+    n_pending: int = 0            # jobs still in flight at aggregation time
 
 
 def paper_reward(d_acc: float, r_t: float, r_e: float, t_budget: float,
@@ -223,14 +257,22 @@ class FLServer:
             n += len(b["y"])
         return sum(accs) / n, sum(losses) / n
 
-    def _ctx(self) -> RoundContext:
+    def _ctx(self, k: Optional[int] = None,
+             available: Optional[np.ndarray] = None,
+             round_idx: Optional[int] = None) -> RoundContext:
+        """Policy-facing round context.  The async engine overrides ``k``
+        (wave size), ``available`` (online AND idle) and ``round_idx`` (its
+        dispatch-cycle counter); the sync path uses the defaults."""
         sys = self.pool.system_state(self._flops_per_epoch(), self.task.param_bytes())
         est_t, est_e = self._static_round_estimates()
         return RoundContext(
-            round=len(self.history), n=self.cfg.n_devices, k=self.cfg.k_select,
+            round=len(self.history) if round_idx is None else round_idx,
+            n=self.cfg.n_devices, k=k or self.cfg.k_select,
             sys=sys, est_t_round=est_t, est_e_round=est_e,
             data_sizes=self.data_sizes, last_loss=self.last_loss.copy(),
-            loss_age=self.loss_age.copy(), available=self.pool.available(),
+            loss_age=self.loss_age.copy(),
+            available=(self.pool.available() if available is None
+                       else available),
             selection_count=self.selection_count.copy(), rng=self.rng)
 
     def _client_data(self, i: int):
@@ -266,10 +308,10 @@ class FLServer:
         # ---- probe stage ---------------------------------------------
         if plan.has_probe:
             self._check_available(ctx, probe_ids, policy, "probed")
-            reqs = [ClientRequest(int(i), *self._client_data(int(i)),
-                                  epochs=plan.probe_epochs,
-                                  seed=cfg.seed + 1000 * ctx.round + int(i))
-                    for i in probe_ids]
+            reqs = build_requests(probe_ids, self._client_data,
+                                  plan.probe_epochs, seed=cfg.seed,
+                                  round_idx=ctx.round,
+                                  stride=PROBE_SEED_STRIDE)
             probed = self._execute(reqs)
             probe_params = probed.params
             probe_losses = np.array([probed.losses[int(i)][-1] for i in probe_ids])
@@ -301,11 +343,11 @@ class FLServer:
 
         # ---- completion stage (survivors only) -----------------------
         if plan.completion_epochs > 0 and len(survivors):
-            reqs = [ClientRequest(int(i), *self._client_data(int(i)),
-                                  epochs=plan.completion_epochs,
-                                  seed=cfg.seed + 2000 * ctx.round + int(i),
-                                  init_params=probe_params.get(int(i)))
-                    for i in survivors]
+            reqs = build_requests(survivors, self._client_data,
+                                  plan.completion_epochs, seed=cfg.seed,
+                                  round_idx=ctx.round,
+                                  stride=COMPLETE_SEED_STRIDE,
+                                  init_params=probe_params)
             completed = self._execute(reqs)
             client_results: Dict[int, Params] = dict(completed.params)
             # losses recorded from survivors only: a device that dropped or
@@ -352,8 +394,31 @@ class FLServer:
                        probe_states)
         return result
 
+    # ------------------------------------------------------------------
+    def run_async(self, policy: SelectionPolicy,
+                  aggregations: Optional[int] = None,
+                  verbose: bool = False) -> List[RoundResult]:
+        """Asynchronous regime: event loop over the scenario's availability
+        windows with buffered, staleness-weighted aggregation (see
+        :mod:`repro.fl.async_engine`).  Runs until ``aggregations`` (default
+        ``cfg.rounds``) buffer merges; each merge appends one
+        :class:`RoundResult` whose ``cum_time`` is the absolute virtual
+        clock — overlapping client work is not summed."""
+        from repro.fl.async_engine import AsyncRoundEngine
+
+        engine = AsyncRoundEngine(self, policy)
+        engine.run(aggregations or self.cfg.rounds, verbose=verbose)
+        return self.history
+
+    @property
+    def is_async(self) -> bool:
+        """``mode="async"`` — or the ``"async"`` executor-registry alias."""
+        return self.cfg.mode == "async" or self.cfg.executor == "async"
+
     def run(self, policy: SelectionPolicy, rounds: Optional[int] = None,
             verbose: bool = False) -> List[RoundResult]:
+        if self.is_async:
+            return self.run_async(policy, aggregations=rounds, verbose=verbose)
         for r in range(rounds or self.cfg.rounds):
             res = self.run_round(policy)
             if verbose:

@@ -23,6 +23,13 @@ Latency/energy of a round for device i:
     T_comm,i = model_bytes * 2 / bw_i
     E_comp,i = flops_per_epoch_i * j_per_flop_i
     E_comm,i = model_bytes * 2 * j_per_byte_i
+
+Two accounting regimes are built on these observables: the synchronous
+barrier reduction (:func:`plan_round_latency` / :func:`plan_round_energy` —
+max/sum over a cohort, stragglers cut at the round deadline with sunk cost)
+and the per-device job primitives (:func:`client_job_latency` /
+:func:`client_job_energy`) that the asynchronous engine overlaps on its
+virtual clock.
 """
 from __future__ import annotations
 
@@ -137,6 +144,24 @@ class DevicePool:
         self._avail_state = self.availability.step(self._avail_state, self.rng,
                                                    self.round_idx)
 
+    def advance_to(self, round_idx: int) -> None:
+        """Fast-forward the dynamics to ``round_idx`` (replaying every
+        intermediate step so the stochastic models keep their per-round
+        semantics).  The async engine calls this at availability
+        *transitions* — :meth:`next_transition` tells it which rounds it can
+        skip over without the mask changing."""
+        while self.round_idx < round_idx:
+            self.advance_round()
+
+    def next_transition(self) -> Optional[int]:
+        """Next round index at which the availability mask may change
+        (``None`` = never).  Models that don't implement
+        ``next_transition`` are assumed to be able to flip every round."""
+        fn = getattr(self.availability, "next_transition", None)
+        if fn is None:
+            return self.round_idx + 1
+        return fn(self._avail_state, self.round_idx)
+
     def loads(self) -> np.ndarray:
         return self.load_model.loads(self._load_state, self.round_idx)
 
@@ -229,6 +254,35 @@ def plan_round_energy(state: RoundSystemState, probe_ids: np.ndarray,
         frac = np.clip(deadline_s / np.maximum(t_full, 1e-12), 0.0, 1.0)
         rest = rest * frac
     return e + float(rest.sum())
+
+
+def client_job_latency(state: RoundSystemState, ids: np.ndarray, epochs: int,
+                       include_comm: bool = True) -> np.ndarray:
+    """(len(ids),) seconds of *active* work for one client job: ``epochs``
+    local epochs plus (optionally) the model down+up transfer.
+
+    This is the asynchronous engine's accounting primitive: where the
+    synchronous path reduces a cohort to one barrier number
+    (:func:`plan_round_latency` — max over the cohort, cut at the round
+    deadline), the async path keeps per-device durations and overlaps them
+    on a virtual clock, so there is no deadline and no sunk straggler cost —
+    a job interrupted by an availability gap simply resumes.
+    """
+    t = state.t_comp[ids] * epochs
+    if include_comm:
+        t = t + state.t_comm[ids]
+    return t
+
+
+def client_job_energy(state: RoundSystemState, ids: np.ndarray, epochs: int,
+                      include_comm: bool = True) -> np.ndarray:
+    """(len(ids),) joules for one client job (see :func:`client_job_latency`).
+    Partially-run jobs (mid-job dropout) are charged pro-rata by the async
+    engine; paused jobs consume nothing while offline."""
+    e = state.e_comp[ids] * epochs
+    if include_comm:
+        e = e + state.e_comm[ids]
+    return e
 
 
 def round_latency(state: RoundSystemState, probe_set: np.ndarray,

@@ -1,0 +1,278 @@
+"""Async round engine: staleness weighting, sync/async parity, determinism,
+availability-window traversal, and the executor-registry alias."""
+import jax
+import numpy as np
+import pytest
+
+from repro.fl import FLConfig, FLServer, build_policy, build_scenario
+from repro.fl.aggregation import (
+    buffered_aggregate,
+    fedavg,
+    staleness_weight,
+)
+from repro.fl.scenarios import (
+    AlwaysAvailable,
+    ChurnAvailability,
+    DiurnalAvailability,
+)
+
+
+# ---------------------------------------------------------------------------
+# staleness weighting + buffered aggregation
+# ---------------------------------------------------------------------------
+
+
+def test_staleness_weight_kinds():
+    lags = np.array([0, 1, 4, 10, 50])
+    np.testing.assert_array_equal(staleness_weight(lags, "constant"),
+                                  np.ones(5))
+    poly = staleness_weight(lags, "polynomial", a=0.5)
+    assert poly[0] == 1.0 and np.all(np.diff(poly) < 0)
+    assert poly[1] == pytest.approx(2.0 ** -0.5)
+    hinge = staleness_weight(lags, "hinge", a=0.5, b=4)
+    np.testing.assert_array_equal(hinge[:3], np.ones(3))   # lag <= b flat
+    assert hinge[3] == pytest.approx(1.0 / (1.0 + 0.5 * 6))
+    assert hinge[4] < hinge[3]
+    with pytest.raises(ValueError, match="unknown staleness"):
+        staleness_weight(lags, "bogus")
+
+
+def _toy_params(seed):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=(3, 2)).astype(np.float32),
+            "b": rng.normal(size=(2,)).astype(np.float32)}
+
+
+def test_buffered_aggregate_constant_reduces_to_fedavg():
+    g = _toy_params(0)
+    clients = [_toy_params(i) for i in (1, 2, 3)]
+    weights = [10.0, 20.0, 5.0]
+    merged = buffered_aggregate(g, clients, weights, lags=[0, 3, 7],
+                                kind="constant")
+    ref = fedavg(clients, weights)
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_buffered_aggregate_stale_updates_barely_move_global():
+    """Mass lost to staleness decay stays with the current global model."""
+    g = _toy_params(0)
+    p = _toy_params(1)
+    fresh = buffered_aggregate(g, [p], [1.0], lags=[0], kind="polynomial",
+                               a=1.0)
+    stale = buffered_aggregate(g, [p], [1.0], lags=[99], kind="polynomial",
+                               a=1.0)
+    for gl, fr, st, pl in zip(jax.tree.leaves(g), jax.tree.leaves(fresh),
+                              jax.tree.leaves(stale), jax.tree.leaves(p)):
+        np.testing.assert_allclose(np.asarray(fr), np.asarray(pl), atol=1e-6)
+        np.testing.assert_allclose(np.asarray(st), np.asarray(gl), atol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# availability transitions (the async clock's jump targets)
+# ---------------------------------------------------------------------------
+
+
+def test_next_transition_always_and_churn():
+    rng = np.random.default_rng(0)
+    always = AlwaysAvailable()
+    assert always.next_transition(always.init_state(8, rng), 5) is None
+    churn = ChurnAvailability()
+    assert churn.next_transition(churn.init_state(8, rng), 5) == 6
+
+
+def test_next_transition_diurnal_exact():
+    """The returned round is the FIRST at which the mask actually changes."""
+    model = DiurnalAvailability(period=24, duty=0.4, phase_spread=0.3)
+    rng = np.random.default_rng(3)
+    state = model.init_state(16, rng)
+    r = 0
+    for _ in range(10):
+        nxt = model.next_transition(state, r)
+        assert nxt is not None and nxt > r
+        cur = model.mask(state, r)
+        for mid in range(r + 1, nxt):
+            np.testing.assert_array_equal(model.mask(state, mid), cur)
+        assert not np.array_equal(model.mask(state, nxt), cur)
+        r = nxt
+
+
+def test_pool_next_transition_and_advance_to():
+    pool = build_scenario("uniform", 16, seed=0)
+    assert pool.next_transition() is None
+    pool = build_scenario("high-churn", 16, seed=0)
+    assert pool.next_transition() == pool.round_idx + 1
+    ref = build_scenario("high-churn", 16, seed=0)
+    for _ in range(5):
+        ref.advance_round()
+    pool.advance_to(5)
+    np.testing.assert_array_equal(pool.available(), ref.available())
+    np.testing.assert_array_equal(pool.loads(), ref.loads())
+
+
+# ---------------------------------------------------------------------------
+# sync/async parity (the reduction anchor) + determinism
+# ---------------------------------------------------------------------------
+
+
+def test_async_parity_with_sync_engine(mlp_task, fl_data):
+    """buffer_size=K, always-available scenario, constant staleness weight:
+    the async engine replays the synchronous engine's selection draws,
+    per-client seeds and FedAvg merge -> identical global model."""
+    kw = dict(n_devices=20, k_select=4, rounds=5, l_ep=2, lr=0.1, seed=0)
+    srv_sync = FLServer(FLConfig(**kw), mlp_task, fl_data)
+    hist_sync = srv_sync.run(build_policy("fedavg"))
+
+    srv_async = FLServer(FLConfig(mode="async", **kw), mlp_task, fl_data)
+    hist_async = srv_async.run(build_policy("fedavg"))
+
+    assert len(hist_sync) == len(hist_async) == 5
+    for rs, ra in zip(hist_sync, hist_async):
+        np.testing.assert_array_equal(rs.selected, ra.selected)
+        assert rs.acc == pytest.approx(ra.acc, abs=1e-6)
+    for a, b in zip(jax.tree.leaves(srv_sync.global_params),
+                    jax.tree.leaves(srv_async.global_params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+    np.testing.assert_allclose(srv_sync.last_loss, srv_async.last_loss,
+                               atol=1e-6)
+
+
+def test_async_determinism_under_fixed_seed(mlp_task, fl_data):
+    def run_once():
+        cfg = FLConfig(n_devices=20, k_select=4, rounds=6, l_ep=2, lr=0.1,
+                       seed=11, mode="async", async_concurrency=10,
+                       scenario="high-churn", staleness="polynomial")
+        srv = FLServer(cfg, mlp_task, fl_data)
+        hist = srv.run(build_policy("fedavg"))
+        return srv, hist
+
+    s1, h1 = run_once()
+    s2, h2 = run_once()
+    for r1, r2 in zip(h1, h2):
+        np.testing.assert_array_equal(r1.selected, r2.selected)
+        np.testing.assert_array_equal(r1.failed, r2.failed)
+        assert r1.acc == r2.acc and r1.cum_time == r2.cum_time
+        assert r1.mean_staleness == r2.mean_staleness
+    for a, b in zip(jax.tree.leaves(s1.global_params),
+                    jax.tree.leaves(s2.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# training through availability windows
+# ---------------------------------------------------------------------------
+
+
+def test_async_beats_sync_wall_clock_on_high_churn(mlp_task, fl_data):
+    """The acceptance smoke: on high-churn the async engine reaches the sync
+    engine's round-20 accuracy in measurably less simulated wall-clock (the
+    sync engine forfeits dropped devices' work and pays every round's
+    straggler barrier; the async engine streams the buffer full)."""
+    kw = dict(n_devices=20, k_select=4, l_ep=2, lr=0.1, seed=0,
+              scenario="high-churn")
+    srv_sync = FLServer(FLConfig(rounds=20, **kw), mlp_task, fl_data)
+    hist_sync = srv_sync.run(build_policy("fedavg"))
+    target = hist_sync[-1].acc
+    t_sync = hist_sync[-1].cum_time
+    # sync forfeits work: dropped devices' rounds contribute nothing
+    assert sum(len(r.failed) for r in hist_sync) > 0
+
+    srv_async = FLServer(FLConfig(rounds=60, mode="async",
+                                  async_concurrency=12,
+                                  staleness="polynomial", **kw),
+                         mlp_task, fl_data)
+    hist_async = srv_async.run(build_policy("fedavg"))
+    hit = next((r for r in hist_async if r.acc >= target), None)
+    assert hit is not None, (
+        f"async never reached sync round-20 accuracy {target:.4f} "
+        f"(best {max(r.acc for r in hist_async):.4f})")
+    assert hit.cum_time < 0.9 * t_sync, (
+        f"async ToA {hit.cum_time:.1f}s not measurably below sync "
+        f"{t_sync:.1f}s")
+
+
+def test_async_trains_through_charging_windows(mlp_task, fl_data):
+    """nightly-chargers: most of the fleet is offline at any instant; jobs
+    pause over gaps and resume, and aggregations keep landing."""
+    cfg = FLConfig(n_devices=20, k_select=4, rounds=6, l_ep=2, lr=0.1,
+                   seed=2, mode="async", async_concurrency=8,
+                   scenario="nightly-chargers")
+    srv = FLServer(cfg, mlp_task, fl_data)
+    hist = srv.run(build_policy("fedavg"))
+    assert len(hist) == 6
+    assert all(len(r.selected) > 0 for r in hist)
+    assert all(r.r_e >= 0 and r.r_t >= 0 for r in hist)
+    assert hist[-1].cum_time > 0
+
+
+def test_async_probing_policy_rolls(mlp_task, fl_data):
+    """Probing policies (probe -> select inside each dispatch wave) run
+    under async with partial/rolling cohorts."""
+    cfg = FLConfig(n_devices=20, k_select=4, rounds=3, l_ep=2, lr=0.1,
+                   seed=1, mode="async", async_concurrency=8,
+                   scenario="high-churn")
+    srv = FLServer(cfg, mlp_task, fl_data)
+    hist = srv.run(build_policy("fedmarl"))
+    assert len(hist) == 3
+    assert all(len(r.selected) > 0 for r in hist)
+
+
+# ---------------------------------------------------------------------------
+# config / registry surface
+# ---------------------------------------------------------------------------
+
+
+def test_async_executor_alias_matches_mode(mlp_task, fl_data):
+    kw = dict(n_devices=20, k_select=4, rounds=3, l_ep=2, lr=0.1, seed=0)
+    srv_mode = FLServer(FLConfig(mode="async", **kw), mlp_task, fl_data)
+    h_mode = srv_mode.run(build_policy("fedavg"))
+    srv_alias = FLServer(FLConfig(executor="async", **kw), mlp_task, fl_data)
+    assert srv_alias.is_async
+    h_alias = srv_alias.run(build_policy("fedavg"))
+    for a, b in zip(h_mode, h_alias):
+        assert a.acc == pytest.approx(b.acc, abs=1e-6)
+
+
+def test_async_dispatch_executor_registered():
+    from repro.fl import available_executors, make_executor
+
+    assert "async" in available_executors()
+    ex = make_executor("async")
+    assert ex.name == "async" and ex.inner.name == "sequential"
+    assert make_executor("async", inner="vmapped").inner.name == "vmapped"
+
+
+def test_concurrency_below_buffer_size_raises(mlp_task, fl_data):
+    cfg = FLConfig(n_devices=20, k_select=4, rounds=1, l_ep=1, seed=0,
+                   mode="async", buffer_size=8, async_concurrency=4)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    with pytest.raises(ValueError, match="async_concurrency"):
+        srv.run(build_policy("fedavg"))
+
+
+def test_async_load_dynamics_keep_stepping(mlp_task, fl_data):
+    """The lazy pool replay: even in an always-available scenario (no
+    availability transitions) the load dynamics advance with the virtual
+    clock instead of freezing at the engine's start round."""
+    cfg = FLConfig(n_devices=20, k_select=4, rounds=6, l_ep=2, lr=0.1,
+                   seed=0, mode="async", scenario="flash-crowd",
+                   async_concurrency=8)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    srv.run(build_policy("fedavg"))
+    assert srv.pool.round_idx > 1, "pool dynamics froze at the start round"
+
+
+def test_unknown_staleness_kind_raises(mlp_task, fl_data):
+    cfg = FLConfig(n_devices=20, k_select=4, rounds=1, l_ep=1, seed=0,
+                   mode="async", staleness="bogus")
+    srv = FLServer(cfg, mlp_task, fl_data)
+    with pytest.raises(ValueError, match="unknown staleness"):
+        srv.run(build_policy("fedavg"))
+
+
+def test_round_result_async_fields_default_for_sync(mlp_task, fl_data):
+    cfg = FLConfig(n_devices=20, k_select=3, rounds=1, l_ep=1, lr=0.1, seed=0)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    res = srv.run_round(build_policy("fedavg"))
+    assert res.mean_staleness == 0.0 and res.max_staleness == 0
+    assert res.n_pending == 0

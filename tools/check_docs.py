@@ -1,0 +1,142 @@
+#!/usr/bin/env python
+"""Docs CI gate: link-check docs/*.md + README.md and run their doctests.
+
+Checks, for every markdown link ``[text](target)`` outside fenced code
+blocks:
+
+* relative file targets resolve to an existing file/directory (relative to
+  the linking file);
+* ``#anchor`` fragments (own-page or cross-page) match a real heading,
+  using GitHub's slugification (lowercase, punctuation stripped, spaces to
+  hyphens, duplicate slugs suffixed ``-1``, ``-2``, ...);
+* http(s) links are skipped (CI runs offline).
+
+Then runs ``doctest`` over each markdown file so every ``>>>`` snippet in
+the docs keeps executing against the real package (run with
+``PYTHONPATH=src``).
+
+    PYTHONPATH=src python tools/check_docs.py
+
+Exits non-zero listing every broken link/anchor/doctest.
+"""
+from __future__ import annotations
+
+import doctest
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC_FILES = sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+DOC_FILES += [os.path.join(ROOT, "README.md")]
+
+_LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*)$")
+_FENCE_RE = re.compile(r"^(```|~~~)")
+
+
+def strip_code_blocks(text: str) -> str:
+    """Blank out fenced code blocks (links inside them aren't rendered)."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE_RE.match(line.strip()):
+            in_fence = not in_fence
+            out.append("")
+            continue
+        out.append("" if in_fence else line)
+    return "\n".join(out)
+
+
+def github_slug(heading: str, seen: dict) -> str:
+    """GitHub's anchor slug for a heading (with duplicate suffixing)."""
+    slug = heading.strip().lower()
+    slug = re.sub(r"[^\w\- ]", "", slug)
+    slug = slug.replace(" ", "-")
+    n = seen.get(slug, 0)
+    seen[slug] = n + 1
+    return slug if n == 0 else f"{slug}-{n}"
+
+
+def anchors_of(path: str) -> set:
+    with open(path) as f:
+        text = strip_code_blocks(f.read())
+    seen: dict = {}
+    out = set()
+    for line in text.splitlines():
+        m = _HEADING_RE.match(line)
+        if m:
+            # inline markdown in headings doesn't contribute to the slug
+            title = re.sub(r"[`*_]", "", m.group(2))
+            out.add(github_slug(title, seen))
+    return out
+
+
+def check_file(path: str, anchor_cache: dict) -> list:
+    errors = []
+    with open(path) as f:
+        text = strip_code_blocks(f.read())
+    rel = os.path.relpath(path, ROOT)
+    for m in _LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, anchor = target.partition("#")
+        if file_part:
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(path), file_part))
+            if not os.path.exists(resolved):
+                errors.append(f"{rel}: broken path link '{target}'")
+                continue
+        else:
+            resolved = path                     # same-page anchor
+        if anchor:
+            if not resolved.endswith(".md"):
+                errors.append(f"{rel}: anchor on non-markdown target "
+                              f"'{target}'")
+                continue
+            if resolved not in anchor_cache:
+                anchor_cache[resolved] = anchors_of(resolved)
+            if anchor not in anchor_cache[resolved]:
+                errors.append(
+                    f"{rel}: broken anchor '{target}' (known anchors of "
+                    f"{os.path.relpath(resolved, ROOT)}: "
+                    f"{sorted(anchor_cache[resolved])})")
+    return errors
+
+
+def run_doctests(path: str) -> list:
+    res = doctest.testfile(path, module_relative=False, verbose=False,
+                           optionflags=doctest.NORMALIZE_WHITESPACE)
+    if res.failed:
+        return [f"{os.path.relpath(path, ROOT)}: {res.failed}/"
+                f"{res.attempted} doctest(s) failed (run `python -m doctest "
+                f"{os.path.relpath(path, ROOT)} -v` for detail)"]
+    return []
+
+
+def main() -> int:
+    missing = [p for p in DOC_FILES if not os.path.exists(p)]
+    if missing:
+        print("missing expected docs:", missing)
+        return 1
+    errors = []
+    anchor_cache: dict = {}
+    for path in DOC_FILES:
+        errors += check_file(path, anchor_cache)
+    for path in DOC_FILES:
+        errors += run_doctests(path)
+    if errors:
+        print(f"{len(errors)} docs problem(s):")
+        for e in errors:
+            print("  -", e)
+        return 1
+    n_links = sum(len(_LINK_RE.findall(strip_code_blocks(open(p).read())))
+                  for p in DOC_FILES)
+    print(f"docs OK: {len(DOC_FILES)} files, {n_links} links checked, "
+          "doctests green")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -17,11 +17,13 @@ def build_env(n_devices: int = 40, k: int = 5, rounds: int = 25, l_ep: int = 3,
               alpha: float = 2.0, beta: float = 2.0,
               executor: str = "sequential", scenario: str = "uniform",
               mode: str = "sync", async_concurrency: int = 0,
-              staleness: str = "constant", buffer_size: int = 0):
+              staleness: str = "constant", buffer_size: int = 0,
+              feature_set: str = "paper6"):
     """Returns (make_server, task, data). sigma=None -> IID.  ``scenario``
     names the fleet environment (see repro.fl.scenarios); ``mode="async"``
     selects the buffered asynchronous engine (repro.fl.async_engine) with
-    the given concurrency/staleness knobs."""
+    the given concurrency/staleness knobs; ``feature_set`` shapes
+    ``RoundContext.probe_states`` (repro.core.features)."""
     train, test = make_classification_data(n_samples=n_samples, seed=seed)
     if sigma is None:
         parts = iid_partition(len(train.y), n_devices, seed=seed, size_skew=0.8)
@@ -36,7 +38,8 @@ def build_env(n_devices: int = 40, k: int = 5, rounds: int = 25, l_ep: int = 3,
                        alpha=alpha, beta=beta, executor=executor,
                        scenario=scenario, mode=mode,
                        async_concurrency=async_concurrency,
-                       staleness=staleness, buffer_size=buffer_size)
+                       staleness=staleness, buffer_size=buffer_size,
+                       feature_set=feature_set)
         return FLServer(cfg, task, data)
 
     return make_server, task, data

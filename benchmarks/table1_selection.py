@@ -21,10 +21,15 @@ from repro.fl import build_policy
 
 
 def pretrained_qnet(make_server, rounds_per_expert: int = 8, steps: int = 800,
-                    seed: int = 0):
+                    seed: int = 0, feature_set: str = "paper6"):
+    """IL-pretrained Q-net for ``make_server``'s environment.  The recorded
+    demonstrations' state width follows the env's ``FLConfig.feature_set``,
+    so pass the SAME ``feature_set`` here and to ``build_policy``."""
     demos = collect_demonstrations(make_server, rounds_per_expert=rounds_per_expert)
-    demos = augment_demonstrations(demos, n_synthetic=150, seed=seed)
-    q, hist = pretrain_qnet(demos, steps=steps, seed=seed)
+    demos = augment_demonstrations(demos, n_synthetic=150, seed=seed,
+                                   feature_set=feature_set)
+    q, hist = pretrain_qnet(demos, steps=steps, seed=seed,
+                            feature_set=feature_set)
     return q, hist
 
 

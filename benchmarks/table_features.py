@@ -1,0 +1,128 @@
+"""Feature-set sweep: telemetry-conditioned FedRank vs the paper's 6-dim state.
+
+The ROADMAP's staleness-aware and scenario-conditioned selection items both
+reduce to one question: does letting the ranker SEE per-device runtime
+history (EWMA online fraction, empirical completion times, dropout /
+straggler rates, staleness — :mod:`repro.fl.telemetry`) beat ranking on the
+paper's instantaneous 6-dim probe state?  This driver answers it on the two
+scenarios where history matters most — ``high-churn`` (who will still be
+online at upload time?) and ``nightly-chargers`` (whose window is about to
+close?) — under BOTH round regimes:
+
+    feature set in {paper6, telemetry} x scenario x mode in {sync, async}
+
+Each feature set gets its own IL pipeline (demonstrations recorded in an
+environment exposing that feature set; the cloned Q-net's input width
+follows it — ``repro.core.features``), then FedRank runs online.  Rows
+report final accuracy and time/energy-to-target-accuracy (ToA/EoA) against
+a shared per-(scenario, mode) target — ``target_frac`` of the *paper6* run's
+final accuracy, so the telemetry rows answer "how much sooner does history
+reach the baseline's bar".
+
+    PYTHONPATH=src python -m benchmarks.table_features            # full
+    PYTHONPATH=src python -m benchmarks.table_features --quick    # CI smoke
+
+Writes ``results/table_features.json`` + a CSV summary on stdout.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Dict, List, Optional, Sequence
+
+from benchmarks.common import build_env, emit_csv, time_to_accuracy
+from benchmarks.table1_selection import pretrained_qnet
+from repro.fl import build_policy
+
+SCENARIOS = ("high-churn", "nightly-chargers")
+FEATURE_SETS = ("paper6", "telemetry")
+MODES = ("sync", "async")
+ASYNC_KW = dict(mode="async", staleness="polynomial")
+
+HEADER = ["scenario", "mode", "feature_set", "final_acc", "target_acc",
+          "toa_s", "eoa_J", "round_at_target", "toa_vs_paper6"]
+
+
+def run(scenarios: Optional[Sequence[str]] = None,
+        modes: Optional[Sequence[str]] = None,
+        rounds: int = 25, k: int = 5, n_devices: int = 40, seed: int = 0,
+        target_frac: float = 0.95, quick: bool = False,
+        verbose: bool = True) -> List[Dict]:
+    if quick:
+        rounds, k, n_devices = 3, 3, 16
+    scenarios = list(scenarios or SCENARIOS)
+    modes = list(modes or MODES)
+
+    # one IL pipeline per feature set: demonstrations must be recorded in an
+    # environment exposing the same probe-state width the Q-net will see
+    qnets: Dict[str, object] = {}
+    for fs in FEATURE_SETS:
+        make_uniform, _, _ = build_env(n_devices=n_devices, k=k,
+                                       rounds=rounds, sigma=0.1, seed=seed,
+                                       scenario="uniform", feature_set=fs)
+        il_kw = dict(rounds_per_expert=2, steps=60) if quick else {}
+        qnets[fs], _ = pretrained_qnet(make_uniform, seed=seed,
+                                       feature_set=fs, **il_kw)
+
+    rows: List[Dict] = []
+    for scenario in scenarios:
+        for mode in modes:
+            env_kw = dict(ASYNC_KW, async_concurrency=3 * k) \
+                if mode == "async" else {}
+            # async aggregations are cheaper than barrier rounds; give the
+            # trajectory room to cross the sync-calibrated target
+            n_steps = rounds if mode == "sync" or quick else 2 * rounds
+            runs: Dict[str, list] = {}
+            for fs in FEATURE_SETS:
+                make_server, _, _ = build_env(
+                    n_devices=n_devices, k=k, rounds=n_steps, sigma=0.1,
+                    seed=seed, scenario=scenario, feature_set=fs, **env_kw)
+                policy = build_policy("fedrank", qnet=qnets[fs], k=k,
+                                      seed=seed, feature_set=fs)
+                runs[fs] = make_server(5).run(policy)
+            # shared bar: target_frac of the paper6 run's final accuracy
+            target = round(target_frac * runs["paper6"][-1].acc, 4)
+            toa_base, _, _ = time_to_accuracy(runs["paper6"], target)
+            for fs in FEATURE_SETS:
+                hist = runs[fs]
+                toa, eoa, rnd = time_to_accuracy(hist, target)
+                rows.append({
+                    "scenario": scenario, "mode": mode, "feature_set": fs,
+                    "final_acc": round(hist[-1].acc, 4),
+                    "target_acc": target,
+                    "toa_s": round(toa, 1) if toa is not None else "n/a",
+                    "eoa_J": round(eoa, 1) if eoa is not None else "n/a",
+                    "round_at_target": rnd if rnd is not None else "n/a",
+                    "toa_vs_paper6": (round(toa_base / toa, 2)
+                                      if toa and toa_base else "n/a"),
+                })
+                if verbose:
+                    print(rows[-1], flush=True)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: 3 rounds, tiny fleet, tiny IL pretrain")
+    ap.add_argument("--scenarios", nargs="*", default=None,
+                    help=f"subset of {SCENARIOS}")
+    ap.add_argument("--modes", nargs="*", default=None, choices=MODES)
+    ap.add_argument("--rounds", type=int, default=25)
+    ap.add_argument("--target-frac", type=float, default=0.95)
+    ap.add_argument("--out", default="results/table_features.json")
+    args = ap.parse_args()
+
+    rows = run(scenarios=args.scenarios, modes=args.modes,
+               rounds=args.rounds, target_frac=args.target_frac,
+               quick=args.quick)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump({"quick": args.quick, "results": rows}, f, indent=1)
+    print(f"wrote {args.out} ({len(rows)} rows)")
+    emit_csv(rows, HEADER)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,7 +9,17 @@ from repro.core.baselines import (
     TiFLPolicy,
 )
 from repro.core.fedrank import FedRankPolicy, make_fedrank_variant
-from repro.core.features import FEATURE_DIM, STATE_DIM, featurize
+from repro.core.features import (
+    FEATURE_DIM,
+    STATE_DIM,
+    FeatureSet,
+    Paper6FeatureSet,
+    TelemetryFeatureSet,
+    available_feature_sets,
+    featurize,
+    get_feature_set,
+    register_feature_set,
+)
 from repro.core.imitation import (
     Demonstration,
     augment_demonstrations,
@@ -29,6 +39,8 @@ __all__ = [
     "RandomPolicy", "AFLPolicy", "TiFLPolicy", "OortPolicy", "FavorPolicy",
     "FedMarlPolicy", "ExpertPolicy", "FedRankPolicy", "make_fedrank_variant",
     "featurize", "STATE_DIM", "FEATURE_DIM",
+    "FeatureSet", "Paper6FeatureSet", "TelemetryFeatureSet",
+    "get_feature_set", "register_feature_set", "available_feature_sets",
     "init_qnet", "apply_qnet", "soft_update", "hard_update",
     "pairwise_bce", "pairwise_bce_hard", "pairwise_soft_targets",
     "ranking_accuracy", "topk_overlap",

@@ -16,7 +16,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.features import FEATURE_DIM, featurize
 from repro.core.qnet import apply_qnet
 from repro.core.ranking import pairwise_bce, pairwise_soft_targets
 
@@ -35,9 +34,12 @@ class Transition:
 
 
 def pad_cohort(feats: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad a (M, F) cohort to (MAX_COHORT, F) + validity mask.  The feature
+    width follows the input (one policy instance uses ONE feature set, so
+    every transition in its replay buffer stacks consistently)."""
     m = len(feats)
     assert m <= MAX_COHORT, f"cohort {m} exceeds MAX_COHORT {MAX_COHORT}"
-    out = np.zeros((MAX_COHORT, FEATURE_DIM), np.float32)
+    out = np.zeros((MAX_COHORT, feats.shape[1]), np.float32)
     out[:m] = feats
     mask = np.zeros((MAX_COHORT,), np.float32)
     mask[:m] = 1.0

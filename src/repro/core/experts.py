@@ -81,4 +81,10 @@ def fedmarl_utility(states: np.ndarray, *, l_ep: int = 5, w1: float = 1.0,
 
 
 def expert_scores(name: str, states: np.ndarray, **kw) -> np.ndarray:
-    return EXPERTS[name](states, **kw)
+    """Score a cohort with the named expert.  Every feature set puts the
+    paper's 6 columns first (repro.core.features), so wider state matrices
+    (e.g. ``"telemetry"``) are sliced down to the block the analytical
+    scorers are defined on."""
+    from repro.core.features import STATE_DIM
+
+    return EXPERTS[name](np.asarray(states)[:, :STATE_DIM], **kw)

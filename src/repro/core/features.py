@@ -1,12 +1,33 @@
-"""State featurization for the selection Q-network.
+"""State featurization for the selection Q-network — as registered feature sets.
 
 The raw 6-dim device state (paper §3.1) spans many orders of magnitude
 (seconds vs joules vs sample counts), and its absolute scale depends on the
 model/dataset being trained.  Since FedRank only needs the *ranking* within a
 cohort, features are log-compressed then z-scored per cohort — this is what
 lets one pre-trained Q-net generalize to unseen (OOD) deployments.
+
+What the Q-net sees is a pluggable **feature set** (:class:`FeatureSet`),
+looked up by name through a registry mirroring ``repro.fl.registry``:
+
+* ``"paper6"`` (default) — exactly the paper's 6-dim state
+  ``(T_comp, T_comm, E_comp, E_comm, L_i, D_i)``; the module-level
+  :func:`featurize` / :data:`STATE_DIM` remain its implementation, so
+  existing callers and trajectories are bit-for-bit unchanged.
+* ``"telemetry"`` — the paper block plus the per-device runtime-history
+  block of :class:`repro.fl.telemetry.DeviceTelemetry` (EWMA online
+  fraction, empirical completion-time distribution, dropout/straggler
+  rates, staleness history and predicted staleness) — the features the
+  ROADMAP's staleness-aware and scenario-conditioned selection items call
+  for.  The paper columns come FIRST, so analytical experts that index
+  ``states[:, :6]`` score any feature set's raw states unchanged.
+
+The choice threads ``FLConfig.feature_set`` →
+``RoundContext.probe_states`` → the FedRank Q-net (whose input width
+follows ``FeatureSet.feature_dim``).
 """
 from __future__ import annotations
+
+from typing import Dict, List, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -41,3 +62,168 @@ def featurize_jnp(states: jnp.ndarray, mask: jnp.ndarray) -> jnp.ndarray:
     mu = (f * w).sum(0, keepdims=True) / denom
     var = ((f - mu) ** 2 * w).sum(0, keepdims=True) / denom
     return ((f - mu) / jnp.sqrt(var + 1e-6)) * w
+
+
+# ---------------------------------------------------------------------------
+# Feature sets
+# ---------------------------------------------------------------------------
+
+
+class Paper6FeatureSet:
+    """The paper's 6-dim state, verbatim (the seed behavior)."""
+
+    name = "paper6"
+    state_dim = STATE_DIM       # raw probe-state width
+    feature_dim = FEATURE_DIM   # Q-net input width
+
+    def raw_states(self, ctx, ids: np.ndarray,
+                   probe_losses: np.ndarray) -> np.ndarray:
+        """(len(ids), 6) probe-state matrix for probed devices."""
+        s = ctx.sys
+        return np.stack([
+            s.t_comp[ids], s.t_comm[ids], s.e_comp[ids], s.e_comm[ids],
+            probe_losses, ctx.data_sizes[ids].astype(np.float64),
+        ], axis=1)
+
+    def bookkeeping_states(self, ctx) -> np.ndarray:
+        """(N, 6) pre-probe proxy: static estimates + last observed loss
+        (what FedRank ranks to pick its probing cohort)."""
+        return np.stack([
+            ctx.est_t_round / 5.0, ctx.sys.t_comm,   # comm is load-independent
+            ctx.est_e_round / 5.0, ctx.sys.e_comm,
+            ctx.last_loss, ctx.data_sizes.astype(float)], axis=1)
+
+    def featurize(self, states: np.ndarray) -> np.ndarray:
+        return featurize(states)
+
+    def synthetic_states(self, rng: np.random.Generator,
+                         cohort: int) -> np.ndarray:
+        """Plausible random raw states for IL demonstration augmentation
+        (:func:`repro.core.imitation.augment_demonstrations`)."""
+        return np.stack([
+            rng.lognormal(3.0, 1.2, cohort),        # t_comp
+            rng.lognormal(2.0, 1.0, cohort),        # t_comm
+            rng.lognormal(1.0, 1.2, cohort),        # e_comp
+            rng.lognormal(0.0, 1.0, cohort),        # e_comm
+            rng.uniform(0.05, 3.0, cohort),         # loss
+            rng.lognormal(5.0, 0.8, cohort),        # data size
+        ], axis=1)
+
+
+def _telemetry_schema():
+    """(names, log_compressed) of the history block — imported lazily so
+    this module stays importable without triggering ``repro.fl``'s package
+    init mid-cycle.  Width, column order and per-column normalization all
+    follow ``repro.fl.telemetry.TELEMETRY_FEATURES``: extending the block
+    there is the only edit needed."""
+    from repro.fl.telemetry import TELEMETRY_FEATURES, TELEMETRY_LOG_FEATURES
+
+    unknown = TELEMETRY_LOG_FEATURES - set(TELEMETRY_FEATURES)
+    if unknown:
+        raise ValueError(f"TELEMETRY_LOG_FEATURES names unknown telemetry "
+                         f"features: {sorted(unknown)}")
+    return TELEMETRY_FEATURES, TELEMETRY_LOG_FEATURES
+
+
+class TelemetryFeatureSet(Paper6FeatureSet):
+    """Paper block + per-device runtime-history block.
+
+    Raw state: columns ``[0:6]`` are the paper state (expert scorers keep
+    working on any feature set), columns ``[6:]`` the
+    :data:`repro.fl.telemetry.TELEMETRY_FEATURES` block.  A context with no
+    telemetry attached (hand-built in tests) gets a zero history block of
+    the right shape.
+    """
+
+    name = "telemetry"
+
+    @property
+    def state_dim(self) -> int:
+        return STATE_DIM + len(_telemetry_schema()[0])
+
+    @property
+    def feature_dim(self) -> int:
+        return FEATURE_DIM + len(_telemetry_schema()[0])
+
+    def _history_block(self, ctx, ids: np.ndarray) -> np.ndarray:
+        telemetry = getattr(ctx, "telemetry", None)
+        if telemetry is None:
+            return np.zeros((len(ids), self.state_dim - STATE_DIM))
+        return telemetry.feature_block(ids, ctx.est_t_round[ids])
+
+    def raw_states(self, ctx, ids, probe_losses) -> np.ndarray:
+        return np.concatenate([
+            super().raw_states(ctx, ids, probe_losses),
+            self._history_block(ctx, ids)], axis=1)
+
+    def bookkeeping_states(self, ctx) -> np.ndarray:
+        ids = np.arange(ctx.n)
+        return np.concatenate([
+            super().bookkeeping_states(ctx),
+            self._history_block(ctx, ids)], axis=1)
+
+    def featurize(self, states: np.ndarray) -> np.ndarray:
+        """Paper transform (delegated to :func:`featurize`, so the shared
+        columns can never drift from ``paper6``) plus the history block:
+        log-compressed where heavy-tailed (``TELEMETRY_LOG_FEATURES``), raw
+        where already in [0, 1] (online fraction, rates), z-scored per
+        cohort.  Normalization is per-column, so concatenating the two
+        blocks equals one joint transform."""
+        names, log_names = _telemetry_schema()
+        s = np.asarray(states, np.float64)
+        h = s[:, STATE_DIM:STATE_DIM + len(names)].copy()
+        log_cols = [j for j, name in enumerate(names) if name in log_names]
+        h[:, log_cols] = np.log1p(np.maximum(h[:, log_cols], 0.0))
+        mu = h.mean(axis=0, keepdims=True)
+        sd = h.std(axis=0, keepdims=True) + 1e-6
+        hist = ((h - mu) / sd).astype(np.float32)
+        return np.concatenate([featurize(s[:, :STATE_DIM]), hist], axis=1)
+
+    def synthetic_states(self, rng: np.random.Generator,
+                         cohort: int) -> np.ndarray:
+        draws = {
+            "online_frac": lambda: rng.uniform(0.05, 1.0, cohort),
+            "comp_mean_s": lambda: rng.lognormal(3.5, 1.0, cohort),
+            "comp_std_s": lambda: rng.lognormal(1.5, 1.0, cohort),
+            "selection_count": lambda: rng.integers(0, 50, cohort
+                                                    ).astype(float),
+            "dropout_rate": lambda: rng.uniform(0.0, 0.5, cohort),
+            "straggler_rate": lambda: rng.uniform(0.0, 0.5, cohort),
+            "staleness_ewma": lambda: rng.lognormal(0.0, 1.0, cohort),
+            "expected_staleness": lambda: rng.lognormal(0.5, 1.0, cohort),
+        }
+        block = np.stack([draws[n]() for n in _telemetry_schema()[0]], axis=1)
+        return np.concatenate([super().synthetic_states(rng, cohort), block],
+                              axis=1)
+
+
+FeatureSet = Paper6FeatureSet  # structural base: every set shares its surface
+
+_FEATURE_SETS: Dict[str, FeatureSet] = {}
+
+
+def register_feature_set(fs: FeatureSet) -> FeatureSet:
+    """Register a feature set instance (duplicate names are an error)."""
+    if fs.name in _FEATURE_SETS:
+        raise ValueError(f"feature set {fs.name!r} already registered")
+    _FEATURE_SETS[fs.name] = fs
+    return fs
+
+
+def get_feature_set(name: Union[str, FeatureSet]) -> FeatureSet:
+    """Resolve a feature set by name (instances pass through)."""
+    if not isinstance(name, str):
+        return name
+    try:
+        return _FEATURE_SETS[name]
+    except KeyError:
+        raise KeyError(f"unknown feature set {name!r}; "
+                       f"registered: {available_feature_sets()}") from None
+
+
+def available_feature_sets() -> List[str]:
+    return sorted(_FEATURE_SETS)
+
+
+register_feature_set(Paper6FeatureSet())
+register_feature_set(TelemetryFeatureSet())

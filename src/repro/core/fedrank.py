@@ -22,7 +22,7 @@ from repro.core.dqn import (
     make_td_train_step,
     pad_cohort,
 )
-from repro.core.features import featurize
+from repro.core.features import get_feature_set
 from repro.core.qnet import apply_qnet, hard_update, init_qnet
 from repro.fl.server import RoundContext, RoundResult
 
@@ -34,6 +34,9 @@ class FedRankPolicy:
         self,
         qnet_params=None,              # IL-pretrained params (None => cold start)
         *,
+        feature_set: str = "paper6",   # probe-state feature set; the Q-net
+        #                                input width follows it (must match
+        #                                FLConfig.feature_set)
         seed: int = 0,
         gamma: float = 0.9,
         rank_eps: float = 0.5,         # epsilon in L = L_RL + eps * L_Rank
@@ -51,9 +54,17 @@ class FedRankPolicy:
         name: str = "fedrank",
     ):
         self.name = name
+        self.fs = get_feature_set(feature_set)
         key = jax.random.PRNGKey(seed)
         self.q = (jax.tree.map(jnp.copy, qnet_params)
-                  if qnet_params is not None else init_qnet(key))
+                  if qnet_params is not None
+                  else init_qnet(key, in_dim=self.fs.feature_dim))
+        q_in = int(self.q["w1"].shape[0])
+        if q_in != self.fs.feature_dim:
+            raise ValueError(
+                f"Q-net input width {q_in} does not match feature set "
+                f"{self.fs.name!r} (feature_dim={self.fs.feature_dim}) — "
+                "pretrain the Q-net on the same feature set it selects with")
         self.q_target = jax.tree.map(jnp.copy, self.q)
         self.gamma = gamma
         self.rank_eps = rank_eps if use_rank_loss else 0.0
@@ -83,11 +94,8 @@ class FedRankPolicy:
         avail = ctx.available_ids()
         m = min(len(avail), MAX_COHORT,
                 max(ctx.k, int(round(ctx.k * self.probe_factor))))
-        book = np.stack([
-            ctx.est_t_round / 5.0, ctx.sys.t_comm,   # comm is load-independent
-            ctx.est_e_round / 5.0, ctx.sys.e_comm,
-            ctx.last_loss, ctx.data_sizes.astype(float)], axis=1)
-        feats = featurize(book)
+        book = self.fs.bookkeeping_states(ctx)
+        feats = self.fs.featurize(book)
         qs = np.asarray(apply_qnet(self.q, jnp.asarray(feats)))
         # over-participation decay mirrors the experts' fairness behavior
         qs = qs - 0.05 * np.sqrt(ctx.selection_count)
@@ -108,7 +116,12 @@ class FedRankPolicy:
 
     def select(self, ctx: RoundContext, probe_ids: np.ndarray,
                probe_states: np.ndarray) -> np.ndarray:
-        feats = featurize(probe_states)
+        if probe_states.shape[1] != self.fs.state_dim:
+            raise ValueError(
+                f"policy {self.name!r} expects {self.fs.name!r} probe states "
+                f"(width {self.fs.state_dim}), got width "
+                f"{probe_states.shape[1]} — set FLConfig.feature_set to match")
+        feats = self.fs.featurize(probe_states)
         qs = np.asarray(apply_qnet(self.q, jnp.asarray(feats)))
         order = np.argsort(-qs)
         chosen = list(order[:ctx.k])
@@ -126,7 +139,7 @@ class FedRankPolicy:
                 probe_states: Optional[np.ndarray]) -> None:
         if probe_states is None:
             return
-        feats = featurize(probe_states)
+        feats = self.fs.featurize(probe_states)
         pf, pmask = pad_cohort(feats)
         if self._pending is not None:
             lf, lmask, laction, lreward = self._pending

@@ -19,14 +19,15 @@ import numpy as np
 
 from repro.core import experts as experts_lib
 from repro.core.baselines import ExpertPolicy
-from repro.core.features import featurize
+from repro.core.features import get_feature_set
 from repro.core.qnet import apply_qnet, init_qnet
 from repro.core.ranking import pairwise_bce_hard, ranking_accuracy, topk_overlap
 
 
 @dataclass
 class Demonstration:
-    states: np.ndarray          # (M, 6) raw probe states
+    states: np.ndarray          # (M, state_dim) raw probe states — width
+    #                             follows the recording env's feature set
     scores: np.ndarray          # (M,) expert utility
     expert: str
 
@@ -64,20 +65,18 @@ def collect_demonstrations(
 def augment_demonstrations(demos: List[Demonstration], n_synthetic: int = 200,
                            cohort: int = 30, seed: int = 0,
                            expert_names: Sequence[str] = ("oort", "harmony", "fedmarl"),
+                           feature_set: str = "paper6",
                            ) -> List[Demonstration]:
     """Cheap expert queries on synthetic states — IL's "probe the expert
-    anywhere" advantage (§2.2): broadens coverage beyond visited states."""
+    anywhere" advantage (§2.2): broadens coverage beyond visited states.
+    ``feature_set`` shapes the synthetic states (experts only score the
+    paper block; wider sets draw a plausible history block so the cloned
+    Q-net sees full-width inputs)."""
+    fs = get_feature_set(feature_set)
     rng = np.random.default_rng(seed)
     out = list(demos)
     for _ in range(n_synthetic):
-        states = np.stack([
-            rng.lognormal(3.0, 1.2, cohort),        # t_comp
-            rng.lognormal(2.0, 1.0, cohort),        # t_comm
-            rng.lognormal(1.0, 1.2, cohort),        # e_comp
-            rng.lognormal(0.0, 1.0, cohort),        # e_comm
-            rng.uniform(0.05, 3.0, cohort),         # loss
-            rng.lognormal(5.0, 0.8, cohort),        # data size
-        ], axis=1)
+        states = fs.synthetic_states(rng, cohort)
         name = expert_names[int(rng.integers(len(expert_names)))]
         scores = experts_lib.expert_scores(name, states, l_ep=5)
         out.append(Demonstration(states, scores, name))
@@ -94,6 +93,8 @@ def pretrain_qnet(
     qnet_params=None,
     objective: str = "pairwise",   # "pairwise" (paper) | "pointwise" ablation
     rank_impl: str = "auto",       # pairwise-loss impl: auto | pallas | xla
+    feature_set: str = "paper6",   # featurization of the recorded states —
+    #                                must match the env that recorded them
 ) -> Tuple[Dict, Dict[str, list]]:
     """Behavioral cloning. ``objective="pairwise"`` is the paper's RankNet
     BCE over expert orderings; ``"pointwise"`` regresses the z-scored expert
@@ -102,14 +103,23 @@ def pretrain_qnet(
     ``rank_impl`` selects the pairwise-loss implementation: ``"auto"`` runs
     the tiled Pallas kernel on TPU and the jnp oracle elsewhere;
     ``"pallas"`` forces the kernel (interpret mode off-TPU — slow, used for
-    parity testing)."""
+    parity testing).  The returned Q-net's input width follows
+    ``feature_set`` (pass the same name to ``build_policy("fedrank", ...)``)."""
+    fs = get_feature_set(feature_set)
     key = jax.random.PRNGKey(seed)
-    q = qnet_params if qnet_params is not None else init_qnet(key)
+    q = (qnet_params if qnet_params is not None
+         else init_qnet(key, in_dim=fs.feature_dim))
     rng = np.random.default_rng(seed + 1)
 
+    bad = {d.states.shape[1] for d in demos} - {fs.state_dim}
+    if bad:
+        raise ValueError(
+            f"demonstration state widths {sorted(bad)} do not match feature "
+            f"set {fs.name!r} (state_dim={fs.state_dim}) — record and "
+            "pretrain with the same feature_set")
     # pre-featurize cohorts, pad to common M
     max_m = max(len(d.states) for d in demos)
-    feats = np.zeros((len(demos), max_m, 6), np.float32)
+    feats = np.zeros((len(demos), max_m, fs.feature_dim), np.float32)
     tgts = np.zeros((len(demos), max_m), np.float32)
     raw_tgts = np.zeros((len(demos), max_m), np.float32)
     masks = np.zeros((len(demos), max_m), np.float32)
@@ -117,7 +127,7 @@ def pretrain_qnet(
     raw_scale = float(np.abs(all_scores).mean()) + 1e-9
     for i, d in enumerate(demos):
         m = len(d.states)
-        feats[i, :m] = featurize(d.states)
+        feats[i, :m] = fs.featurize(d.states)
         s = d.scores
         tgts[i, :m] = (s - s.mean()) / (s.std() + 1e-9)
         # raw "absolute artificial score" (global scale only — what the

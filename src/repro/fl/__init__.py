@@ -8,6 +8,7 @@ from repro.fl.aggregation import (
     weighted_delta_aggregate,
 )
 from repro.fl.server import FLServer, FLConfig, RoundResult
+from repro.fl.telemetry import TELEMETRY_FEATURES, DeviceTelemetry
 from repro.fl.async_engine import AsyncJob, AsyncRoundEngine
 from repro.fl.engine import (
     AsyncDispatchExecutor,
@@ -41,6 +42,7 @@ __all__ = [
     "fedavg", "weighted_delta_aggregate",
     "staleness_weight", "buffered_aggregate",
     "FLServer", "FLConfig", "RoundResult",
+    "DeviceTelemetry", "TELEMETRY_FEATURES",
     "AsyncRoundEngine", "AsyncJob",
     "RoundPlan", "build_round_plan", "build_requests",
     "ClientExecutor", "ClientRequest", "ExecutionResult",

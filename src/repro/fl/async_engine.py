@@ -140,6 +140,12 @@ class AsyncRoundEngine:
         while the clock still jumps straight between events."""
         r = self._start_round + int(self.now / self.tick_s + 1e-9)
         if r > self.srv.pool.round_idx:
+            # loss freshness advances with the VIRTUAL clock, one unit per
+            # scenario round — not per dispatch wave (several waves can fire
+            # inside one round, and none at all across a charging gap), so
+            # ctx.loss_age means "scenario rounds since observed" in both
+            # regimes
+            self.srv.loss_age += r - self.srv.pool.round_idx
             self.srv.pool.advance_to(r)
             self._mask = self.srv.pool.available()
             self._next_trans = self.srv.pool.next_transition()
@@ -175,7 +181,6 @@ class AsyncRoundEngine:
 
         k = min(free, n_idle, cfg.k_select)
         ctx = srv._ctx(k=k, available=idle_online, round_idx=self.cycle)
-        srv.loss_age += 1
         plan = build_round_plan(self.policy, ctx, cfg.l_ep)
         probe_ids = np.asarray(plan.probe_ids, dtype=np.int64)
         probe_states = None
@@ -255,7 +260,7 @@ class AsyncRoundEngine:
             loss = float(loss_arr[-1]) if len(loss_arr) else float(srv.last_loss[i])
             self._add_job(i, duration=dur, energy=en, params=params[i],
                           loss=loss, fail_at=fail_at)
-        srv.selection_count[selected] += 1
+        srv.telemetry.observe_selection(selected)   # = srv.selection_count
         self._last_observe = (ctx, probe_ids if plan.has_probe else None,
                               probe_states)
         self.cycle += 1
@@ -306,14 +311,20 @@ class AsyncRoundEngine:
         for job in [j for j in self.jobs.values()
                     if j.elapsed_s >= j.end_s - _EPS]:
             del self.jobs[job.cid]
+            cid = np.array([job.cid])
             if job.fail_at_s < job.duration_s:        # mid-job dropout
                 frac = job.fail_at_s / job.duration_s
                 self._charge(job.energy_j * frac)
                 self._failed_since_agg.append(job.cid)
+                self.srv.telemetry.observe_dropouts(cid)
                 continue
             self._charge(job.energy_j)
             if job.params is None:                    # probe-only early exit
                 continue
+            # active seconds only — pauses over availability gaps cost
+            # wall-clock, not device time, so they don't skew the estimate
+            self.srv.telemetry.observe_completions(cid,
+                                                   np.array([job.duration_s]))
             self.srv.last_loss[job.cid] = job.loss
             self.srv.loss_age[job.cid] = 0
             self.buffer.append(job)
@@ -334,6 +345,8 @@ class AsyncRoundEngine:
                              self.buffer[self.buffer_size:])
         lags = np.array([self.version - j.version for j in take])
         weights = [float(srv.data_sizes[j.cid]) for j in take]
+        srv.telemetry.observe_staleness(
+            np.array([j.cid for j in take], dtype=np.int64), lags)
         srv.global_params = buffered_aggregate(
             srv.global_params, [j.params for j in take], weights, lags,
             kind=cfg.staleness, a=cfg.staleness_a, b=cfg.staleness_b)
@@ -358,6 +371,8 @@ class AsyncRoundEngine:
             mean_staleness=float(lags.mean()), max_staleness=int(lags.max()),
             n_pending=len(self.jobs))
         srv.history.append(result)
+        srv.telemetry.observe_availability(self._mask)   # cadence-aligned
+        srv.telemetry.observe_cadence(r_t)
         self._last_agg_t = self.now
         self._energy_since_agg = 0.0
         self._failed_since_agg = []

@@ -18,7 +18,10 @@ Registered names (see :func:`available_policies`):
   heuristic/learning baselines
 * ``fedrank``, ``fedrank-I``, ``fedrank-P``, ``fedrank-IP`` — the paper's
   policy and its no-IL / no-rank-loss / plain-DQN ablations (pass
-  ``qnet=...`` for the IL-pretrained variants)
+  ``qnet=...`` for the IL-pretrained variants; ``feature_set="telemetry"``
+  sizes the Q-net for the runtime-history features — it must match
+  ``FLConfig.feature_set`` and the feature set the Q-net was pretrained on,
+  see :mod:`repro.core.features`)
 * ``expert-oort``, ``expert-harmony``, ``expert-fedmarl`` — the analytical
   IL teachers wrapped as probing policies
 

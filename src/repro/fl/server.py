@@ -68,6 +68,7 @@ from repro.fl.simulation import (
     plan_round_energy,
     plan_round_latency,
 )
+from repro.fl.telemetry import DeviceTelemetry
 
 Params = Any
 
@@ -94,6 +95,11 @@ class FLConfig:
     failure_rate: float = 0.0     # extra Bernoulli dropout layered on top of
     #                               the scenario's failure model
     executor: str = "sequential"  # client-executor name (repro.fl.engine)
+    feature_set: str = "paper6"   # probe-state feature set exposed on
+    #                               RoundContext (repro.core.features):
+    #                               "paper6" = the paper's 6-dim state,
+    #                               "telemetry" appends the per-device
+    #                               runtime-history block
     mode: str = "sync"            # round regime: "sync" barrier loop or
     #                               "async" buffered aggregation
     #                               (repro.fl.async_engine)
@@ -130,6 +136,11 @@ class RoundContext:
     available: np.ndarray = None     # (N,) bool: online this round (policies
     #                                  MUST only probe/select available devices)
     selection_count: np.ndarray = None  # (N,) times each device was selected
+    telemetry: Optional[DeviceTelemetry] = None   # per-device runtime history
+    #                                  (read-only for policies; both engines
+    #                                  feed it — repro.fl.telemetry)
+    feature_set: Any = None          # FeatureSet shaping probe_states
+    #                                  (None => "paper6", the paper state)
     rng: np.random.Generator = field(repr=False, default=None)
 
     def available_ids(self) -> np.ndarray:
@@ -138,13 +149,28 @@ class RoundContext:
             return np.arange(self.n)
         return np.flatnonzero(self.available)
 
+    def _fs(self):
+        if self.feature_set is None:
+            from repro.core.features import get_feature_set
+
+            return get_feature_set("paper6")
+        return self.feature_set
+
     def probe_states(self, ids: np.ndarray, probe_losses: np.ndarray) -> np.ndarray:
-        """The paper's 6-dim state matrix (len(ids), 6) for probed devices."""
-        s = self.sys
-        return np.stack([
-            s.t_comp[ids], s.t_comm[ids], s.e_comp[ids], s.e_comm[ids],
-            probe_losses, self.data_sizes[ids].astype(np.float64),
-        ], axis=1)
+        """Raw state matrix (len(ids), feature_set.state_dim) for probed
+        devices.  Columns [0:6] are always the paper's 6-dim state; the
+        ``"telemetry"`` feature set appends the runtime-history block."""
+        return self._fs().raw_states(self, ids, probe_losses)
+
+    def expected_staleness(self, ids: np.ndarray) -> np.ndarray:
+        """Predicted model-version lag of an update dispatched now from each
+        device in ``ids``: telemetry-estimated completion time (static
+        estimate before any observation) over the observed aggregation
+        cadence.  Zeros without telemetry (hand-built contexts)."""
+        ids = np.asarray(ids, dtype=np.int64)
+        if self.telemetry is None:
+            return np.zeros(len(ids))
+        return self.telemetry.expected_staleness(ids, self.est_t_round[ids])
 
 
 class SelectionPolicy(Protocol):
@@ -214,12 +240,16 @@ class FLServer:
                 self.pool.failures,
                 dropout=max(self.pool.failures.dropout, cfg.failure_rate))
         self.rng = np.random.default_rng(cfg.seed + 17)
+        from repro.core.features import get_feature_set   # deferred: repro.core
+        #                                                   imports repro.fl
+
+        self.feature_set = get_feature_set(cfg.feature_set)  # validates early
+        self.telemetry = DeviceTelemetry(cfg.n_devices)
         key = jax.random.PRNGKey(cfg.seed)
         self.global_params: Params = task.init(key)
         self.data_sizes = np.array([data.client_size(i) for i in range(cfg.n_devices)])
         self.last_loss = np.full(cfg.n_devices, 3.0)
         self.loss_age = np.zeros(cfg.n_devices)
-        self.selection_count = np.zeros(cfg.n_devices)
         self.history: List[RoundResult] = []
         self._eval_fn = jax.jit(task.accuracy)
         self._loss_fn = jax.jit(task.loss)
@@ -234,6 +264,12 @@ class FLServer:
         self.e_budget = cfg.e_budget or float(np.median(est_e)) * cfg.k_select
 
     # ------------------------------------------------------------------
+    @property
+    def selection_count(self) -> np.ndarray:
+        """Single source of truth: the telemetry's per-device counter (the
+        same array policies read via ``ctx.selection_count``)."""
+        return self.telemetry.selection_count
+
     def _flops_per_epoch(self) -> np.ndarray:
         return self.task.flops_per_sample() * self.data_sizes
 
@@ -273,7 +309,9 @@ class FLServer:
             loss_age=self.loss_age.copy(),
             available=(self.pool.available() if available is None
                        else available),
-            selection_count=self.selection_count.copy(), rng=self.rng)
+            selection_count=self.selection_count.copy(),
+            telemetry=self.telemetry, feature_set=self.feature_set,
+            rng=self.rng)
 
     def _client_data(self, i: int):
         idx = self.data.client_indices[i]
@@ -374,7 +412,24 @@ class FLServer:
         if client_results:
             weights = [self.data_sizes[i] for i in client_results]
             self.global_params = fedavg(list(client_results.values()), weights)
-        self.selection_count[selected] += 1
+
+        # ---- telemetry (deterministic: recording never perturbs a run) ---
+        tel = self.telemetry
+        tel.observe_availability(ctx.available)
+        tel.observe_selection(selected)
+        tel.observe_dropouts(outcome.failed)
+        tel.observe_stragglers(outcome.stragglers)
+        if len(survivors):
+            # same accounting as an async job: probe BARRIER (selection
+            # waits on the whole probe cohort) + comms + completion compute
+            barrier = (float(ctx.sys.t_comp[probe_ids].max())
+                       * plan.probe_epochs if plan.has_probe else 0.0)
+            dur = (barrier + ctx.sys.t_comm[survivors]
+                   + ctx.sys.t_comp[survivors] * plan.completion_epochs)
+            tel.observe_completions(survivors, dur)
+            # synchronous merges land immediately: version lag 0
+            tel.observe_staleness(survivors, np.zeros(len(survivors)))
+        tel.observe_cadence(r_t)
 
         acc, test_loss = self._evaluate()
         d_acc = acc - self._last_acc

@@ -23,6 +23,19 @@ import pytest
 assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen-golden", action="store_true", default=False,
+        help="rewrite tests/golden/ trajectory digests from the current "
+             "engines instead of comparing against them (commit the diff "
+             "only for INTENTIONAL numeric changes)")
+
+
+@pytest.fixture(scope="session")
+def regen_golden(request):
+    return request.config.getoption("--regen-golden")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

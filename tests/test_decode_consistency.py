@@ -9,6 +9,9 @@ import pytest
 from repro.configs import get_model_config, list_archs
 from repro.models import transformer as T
 
+# per-arch decode replays dominate suite wall-clock; the slow CI lane runs them
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", list_archs())
 def test_prefill_decode_matches_forward(arch):

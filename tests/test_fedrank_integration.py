@@ -24,6 +24,7 @@ def _make_server_factory(mlp_task, fl_data, rounds=6, seed=0):
     return make_server
 
 
+@pytest.mark.slow
 def test_il_pretraining_learns_expert_ranking(mlp_task, fl_data):
     make_server = _make_server_factory(mlp_task, fl_data)
     demos = collect_demonstrations(make_server, rounds_per_expert=4)
@@ -58,6 +59,7 @@ def test_ablation_variants_construct():
     assert make_fedrank_variant("no_rank", None, k=5).rank_eps == 0.0
 
 
+@pytest.mark.slow
 def test_fedrank_with_il_beats_cold_start(mlp_task, fl_data):
     """Direction of the paper's headline claim, at smoke scale: the
     IL-pretrained policy should reach at least the cold policy's accuracy."""

@@ -1,0 +1,94 @@
+"""Golden-trajectory regression suite: engine refactors can't drift numerics.
+
+Each case pins a short, fully-seeded FL run (3 rounds / aggregations, two
+named scenarios, both round regimes, probing and non-probing policies) to a
+stored digest under ``tests/golden/``: per-round accuracy, simulated
+wall-clock, the exact selected cohorts and availability counts.  Any change
+to selection order, RNG consumption, failure draws, aggregation math or the
+virtual clock shows up as a digest mismatch here — BEFORE it silently
+shifts benchmark tables.
+
+Intentional numeric changes regenerate the digests:
+
+    PYTHONPATH=src python -m pytest tests/test_golden_trajectories.py \
+        --regen-golden
+
+then commit the diff (review it — it IS the numeric change).
+"""
+import json
+import os
+
+import pytest
+
+from repro.fl import FLConfig, FLServer, build_policy
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+# (scenario, mode, policy): two named scenarios x both regimes, plus the
+# probing path (fedrank exercises probe_set/select/observe + the Q-net)
+CASES = [
+    ("high-churn", "sync", "fedavg"),
+    ("high-churn", "async", "fedavg"),
+    ("nightly-chargers", "sync", "fedavg"),
+    ("nightly-chargers", "async", "fedavg"),
+    ("high-churn", "sync", "fedrank"),
+    ("high-churn", "async", "fedrank"),
+]
+
+
+def _run_case(scenario, mode, policy_name, mlp_task, fl_data):
+    kw = dict(n_devices=20, k_select=3, rounds=3, l_ep=2, lr=0.1, seed=7,
+              scenario=scenario)
+    if mode == "async":
+        kw.update(mode="async", async_concurrency=6, staleness="polynomial")
+    srv = FLServer(FLConfig(**kw), mlp_task, fl_data)
+    pol_kw = {"k": 3, "seed": 7} if policy_name == "fedrank" else {}
+    hist = srv.run(build_policy(policy_name, **pol_kw))
+    return [{
+        "round": r.round,
+        "acc": round(r.acc, 6),
+        "test_loss": round(r.test_loss, 6),
+        "r_t": round(r.r_t, 3),
+        "cum_time": round(r.cum_time, 3),
+        "cum_energy": round(r.cum_energy, 3),
+        "selected": sorted(int(i) for i in r.selected),
+        "failed": sorted(int(i) for i in r.failed),
+        "n_available": r.n_available,
+        "mean_staleness": round(r.mean_staleness, 4),
+    } for r in hist]
+
+
+@pytest.mark.parametrize("scenario,mode,policy", CASES,
+                         ids=[f"{s}-{m}-{p}" for s, m, p in CASES])
+def test_golden_trajectory(scenario, mode, policy, mlp_task, fl_data,
+                           regen_golden):
+    digest = _run_case(scenario, mode, policy, mlp_task, fl_data)
+    path = os.path.join(GOLDEN_DIR, f"{scenario}_{mode}_{policy}.json")
+    if regen_golden:
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(digest, f, indent=1)
+            f.write("\n")
+        return
+    assert os.path.exists(path), (
+        f"missing golden digest {os.path.relpath(path)} — generate it with "
+        "pytest --regen-golden and commit it")
+    with open(path) as f:
+        golden = json.load(f)
+    assert len(digest) == len(golden), (
+        f"{scenario}/{mode}/{policy}: {len(digest)} rounds vs "
+        f"{len(golden)} in the golden digest")
+    for got, want in zip(digest, golden):
+        diff = {k: (want[k], got[k]) for k in want if got.get(k) != want[k]}
+        assert not diff, (
+            f"{scenario}/{mode}/{policy} round {want['round']} drifted "
+            f"(golden, current): {diff} — if intentional, regenerate with "
+            "pytest --regen-golden and commit the diff")
+
+
+def test_golden_runs_are_deterministic(mlp_task, fl_data):
+    """The digest itself must be reproducible within one environment — a
+    flaky digest would make every golden comparison meaningless."""
+    a = _run_case("high-churn", "async", "fedavg", mlp_task, fl_data)
+    b = _run_case("high-churn", "async", "fedavg", mlp_task, fl_data)
+    assert a == b

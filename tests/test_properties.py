@@ -1,0 +1,163 @@
+"""Property-based invariants for aggregation + telemetry.
+
+Runs under real ``hypothesis`` when installed, else the bundled
+deterministic stub (``tests/_hypothesis_stub.py``) — same API subset,
+seeded example generation, so CI exercises a spread of cases either way.
+"""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.fl.aggregation import (
+    STALENESS_KINDS,
+    buffered_aggregate,
+    fedavg,
+    staleness_weight,
+)
+from repro.fl.telemetry import DeviceTelemetry
+
+
+# ---------------------------------------------------------------------------
+# staleness_weight: s(lag) in (0, 1], monotone non-increasing in lag
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(kind=st.sampled_from(STALENESS_KINDS),
+       a=st.floats(min_value=0.05, max_value=3.0),
+       b=st.integers(min_value=0, max_value=16),
+       max_lag=st.integers(min_value=1, max_value=200))
+def test_staleness_weight_bounds_and_monotone(kind, a, b, max_lag):
+    lags = np.arange(max_lag + 1)
+    w = staleness_weight(lags, kind=kind, a=a, b=b)
+    assert np.all(w > 0.0) and np.all(w <= 1.0), f"{kind}: s(lag) not in (0,1]"
+    assert np.all(np.diff(w) <= 1e-12), f"{kind}: s(lag) increased with lag"
+    assert w[0] == pytest.approx(1.0), f"{kind}: fresh update must weigh 1"
+
+
+# ---------------------------------------------------------------------------
+# buffered_aggregate invariants
+# ---------------------------------------------------------------------------
+
+
+def _params(seed, shape=(3, 2)):
+    rng = np.random.default_rng(seed)
+    return {"w": rng.normal(size=shape).astype(np.float32),
+            "b": rng.normal(size=shape[-1:]).astype(np.float32)}
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(min_value=1, max_value=6),
+       seed=st.integers(min_value=0, max_value=10_000),
+       max_lag=st.integers(min_value=0, max_value=50))
+def test_constant_weight_reduces_to_fedavg(n, seed, max_lag):
+    """kind="constant" must equal plain FedAvg regardless of the lags."""
+    rng = np.random.default_rng(seed)
+    g = _params(seed + 1000)
+    clients = [_params(seed + i) for i in range(n)]
+    weights = rng.uniform(0.1, 30.0, size=n).tolist()
+    lags = rng.integers(0, max_lag + 1, size=n)
+    merged = buffered_aggregate(g, clients, weights, lags, kind="constant")
+    ref = fedavg(clients, weights)
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(kind=st.sampled_from(STALENESS_KINDS),
+       n=st.integers(min_value=1, max_value=6),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_global_model_is_fixed_point(kind, n, seed):
+    """A buffer of updates identical to the global model must not move it —
+    the staleness mass-conservation term keeps lost weight with the global
+    model, never inventing or destroying parameter mass."""
+    rng = np.random.default_rng(seed)
+    g = _params(seed)
+    clients = [jax.tree.map(np.copy, g) for _ in range(n)]
+    weights = rng.uniform(0.1, 10.0, size=n).tolist()
+    lags = rng.integers(0, 40, size=n)
+    merged = buffered_aggregate(g, clients, weights, lags, kind=kind)
+    for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(g)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# telemetry EWMA: bounds + determinism
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       steps=st.integers(min_value=1, max_value=40),
+       alpha_pct=st.integers(min_value=1, max_value=100))
+def test_telemetry_ewma_bounds(seed, steps, alpha_pct):
+    """Every statistic stays inside its invariant range under arbitrary
+    observation sequences: online fraction and failure rates in [0, 1],
+    completion mean/std and staleness non-negative."""
+    rng = np.random.default_rng(seed)
+    n = 12
+    tel = DeviceTelemetry(n, alpha=alpha_pct / 100.0)
+    ids = np.arange(n)
+    for _ in range(steps):
+        tel.observe_availability(rng.random(n) < rng.random())
+        sel = rng.choice(n, size=rng.integers(1, n), replace=False)
+        tel.observe_selection(sel)
+        tel.observe_dropouts(sel[: rng.integers(0, len(sel) + 1)])
+        tel.observe_stragglers(sel[: rng.integers(0, len(sel) + 1)])
+        tel.observe_completions(sel, rng.lognormal(2.0, 1.0, len(sel)))
+        tel.observe_staleness(sel, rng.integers(0, 20, len(sel)))
+        tel.observe_cadence(float(rng.lognormal(1.0, 0.5)))
+    assert np.all((tel.online_frac >= 0.0) & (tel.online_frac <= 1.0))
+    assert np.all((tel.dropout_rate(ids) >= 0.0) & (tel.dropout_rate(ids) <= 1.0))
+    assert np.all((tel.straggler_rate(ids) >= 0.0)
+                  & (tel.straggler_rate(ids) <= 1.0))
+    assert np.all(tel.comp_mean_s >= 0.0)
+    assert np.all(tel.completion_std_s(ids) >= 0.0)
+    assert np.all(tel.staleness_ewma >= 0.0)
+    assert tel.cadence_s > 0.0
+    block = tel.feature_block(ids, np.ones(n))
+    assert block.shape == (n, 8) and np.all(np.isfinite(block))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_telemetry_determinism(seed):
+    """Telemetry state is a pure function of the observation sequence."""
+    def feed(tel, rng):
+        n = tel.n
+        for _ in range(15):
+            tel.observe_availability(rng.random(n) < 0.7)
+            sel = rng.choice(n, size=3, replace=False)
+            tel.observe_selection(sel)
+            tel.observe_completions(sel, rng.lognormal(2.0, 1.0, 3))
+            tel.observe_staleness(sel, rng.integers(0, 8, 3))
+            tel.observe_cadence(float(rng.lognormal(1.0, 0.5)))
+        return tel
+
+    t1 = feed(DeviceTelemetry(8), np.random.default_rng(seed))
+    t2 = feed(DeviceTelemetry(8), np.random.default_rng(seed))
+    for name in ("online_frac", "comp_mean_s", "comp_sq_s", "comp_count",
+                 "selection_count", "staleness_ewma", "last_staleness"):
+        np.testing.assert_array_equal(getattr(t1, name), getattr(t2, name))
+    assert t1.cadence_s == t2.cadence_s
+
+
+def test_telemetry_first_observation_seeds_ewma():
+    """The first completion/staleness observation replaces the zero prior
+    instead of being dragged toward it."""
+    tel = DeviceTelemetry(4, alpha=0.2)
+    tel.observe_completions(np.array([1]), np.array([50.0]))
+    assert tel.comp_mean_s[1] == pytest.approx(50.0)
+    tel.observe_completions(np.array([1]), np.array([100.0]))
+    assert tel.comp_mean_s[1] == pytest.approx(0.8 * 50.0 + 0.2 * 100.0)
+    tel.observe_staleness(np.array([2]), np.array([7.0]))
+    assert tel.staleness_ewma[2] == pytest.approx(7.0)
+
+
+def test_telemetry_alpha_validation():
+    with pytest.raises(ValueError, match="alpha"):
+        DeviceTelemetry(4, alpha=0.0)
+    with pytest.raises(ValueError, match="alpha"):
+        DeviceTelemetry(4, alpha=1.5)

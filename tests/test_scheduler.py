@@ -27,6 +27,7 @@ def _greedy_reference(cfg, params, prompt: np.ndarray, max_new: int):
     return out
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["yi-6b", "rwkv6-3b", "h2o-danube-3-4b"])
 def test_batcher_matches_dedicated_decode(arch):
     cfg = get_model_config(arch, smoke=True)

@@ -1,0 +1,201 @@
+"""Telemetry pipeline + feature-set abstraction: parity, validation, feeds.
+
+The hard contract: ``feature_set="paper6"`` (the default) must reproduce
+the pre-feature-set FedRank trajectories bit-for-bit — recording telemetry
+and threading the feature set through ``RoundContext`` may not perturb a
+single RNG draw or float.  The golden suite
+(``tests/test_golden_trajectories.py``) pins those numerics across
+sessions; this module pins the inter-config invariants and validates every
+registered feature set's surface.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.features import (
+    available_feature_sets,
+    get_feature_set,
+)
+from repro.core.qnet import init_qnet
+from repro.fl import FLConfig, FLServer, build_policy
+
+KW = dict(n_devices=20, k_select=3, rounds=3, l_ep=2, lr=0.1, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# cross-feature-set parity: explicit paper6 == default, bit for bit
+# ---------------------------------------------------------------------------
+
+
+def _run_fedrank(mlp_task, fl_data, *, config_fs=None, policy_kw=None,
+                 scenario="high-churn", mode="sync"):
+    kw = dict(KW, scenario=scenario)
+    if config_fs is not None:
+        kw["feature_set"] = config_fs
+    if mode == "async":
+        kw.update(mode="async", async_concurrency=6)
+    srv = FLServer(FLConfig(**kw), mlp_task, fl_data)
+    hist = srv.run(build_policy("fedrank", k=3, seed=3, **(policy_kw or {})))
+    return srv, hist
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_paper6_reproduces_default_trajectories_bitforbit(mlp_task, fl_data,
+                                                          mode):
+    """Spelling the default out (`feature_set="paper6"` on both config and
+    policy) replays the implicit-default run exactly: same selections, same
+    probe cohorts, same global model bits."""
+    s_def, h_def = _run_fedrank(mlp_task, fl_data, mode=mode)
+    s_exp, h_exp = _run_fedrank(mlp_task, fl_data, config_fs="paper6",
+                                policy_kw={"feature_set": "paper6"},
+                                mode=mode)
+    assert len(h_def) == len(h_exp)
+    for a, b in zip(h_def, h_exp):
+        np.testing.assert_array_equal(a.selected, b.selected)
+        np.testing.assert_array_equal(a.probe_set, b.probe_set)
+        assert a.acc == b.acc and a.cum_time == b.cum_time
+    for x, y in zip(jax.tree.leaves(s_def.global_params),
+                    jax.tree.leaves(s_exp.global_params)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_telemetry_feature_set_changes_selection(mlp_task, fl_data):
+    """The appended history block must actually reach the Q-net: a
+    cold-start FedRank conditioned on telemetry features diverges from the
+    paper6 run (same seeds everywhere else)."""
+    _, h6 = _run_fedrank(mlp_task, fl_data)
+    _, ht = _run_fedrank(mlp_task, fl_data, config_fs="telemetry",
+                         policy_kw={"feature_set": "telemetry"})
+    assert any(not np.array_equal(a.selected, b.selected) or a.acc != b.acc
+               for a, b in zip(h6, ht)), (
+        "telemetry features never influenced selection")
+
+
+# ---------------------------------------------------------------------------
+# every registered feature set: probe_states / featurize surface validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fs_name", available_feature_sets())
+def test_feature_set_surface(fs_name, mlp_task, fl_data):
+    fs = get_feature_set(fs_name)
+    assert fs.state_dim >= 6 and fs.feature_dim >= 6
+    srv = FLServer(FLConfig(feature_set=fs_name, **KW), mlp_task, fl_data)
+    srv.run(build_policy("fedavg"), rounds=2)   # populate some telemetry
+    ctx = srv._ctx()
+    ids = ctx.available_ids()[:5]
+    raw = ctx.probe_states(ids, np.linspace(0.5, 2.5, len(ids)))
+    assert raw.shape == (len(ids), fs.state_dim)
+    assert raw.dtype == np.float64
+    assert np.all(np.isfinite(raw))
+    # paper block first: expert scorers keep working on any feature set
+    np.testing.assert_array_equal(raw[:, 0], ctx.sys.t_comp[ids])
+    np.testing.assert_array_equal(raw[:, 5],
+                                  ctx.data_sizes[ids].astype(np.float64))
+    feats = fs.featurize(raw)
+    assert feats.shape == (len(ids), fs.feature_dim)
+    assert feats.dtype == np.float32
+    assert np.all(np.isfinite(feats))
+    book = fs.bookkeeping_states(ctx)
+    assert book.shape == (ctx.n, fs.state_dim)
+    assert np.all(np.isfinite(book))
+    synth = fs.synthetic_states(np.random.default_rng(0), 7)
+    assert synth.shape == (7, fs.state_dim) and np.all(np.isfinite(synth))
+
+
+def test_unknown_feature_set_fails_fast(mlp_task, fl_data):
+    with pytest.raises(KeyError, match="unknown feature set"):
+        FLServer(FLConfig(feature_set="bogus", **KW), mlp_task, fl_data)
+
+
+def test_feature_set_mismatch_raises(mlp_task, fl_data):
+    """A paper6 policy under a telemetry config (or a Q-net pretrained on
+    the wrong width) is a configuration error, not a silent misrank."""
+    srv = FLServer(FLConfig(feature_set="telemetry", **KW), mlp_task, fl_data)
+    with pytest.raises(ValueError, match="feature_set"):
+        srv.run(build_policy("fedrank", k=3), rounds=1)
+    with pytest.raises(ValueError, match="input width"):
+        build_policy("fedrank", qnet=init_qnet(jax.random.PRNGKey(0), in_dim=6),
+                     feature_set="telemetry")
+
+
+# ---------------------------------------------------------------------------
+# telemetry feeds: both engines populate the history the features read
+# ---------------------------------------------------------------------------
+
+
+def test_sync_engine_feeds_telemetry(mlp_task, fl_data):
+    srv = FLServer(FLConfig(scenario="high-churn", **KW), mlp_task, fl_data)
+    hist = srv.run(build_policy("fedavg"))
+    tel = srv.telemetry
+    np.testing.assert_array_equal(tel.selection_count, srv.selection_count)
+    assert tel.dropout_count.sum() == sum(len(r.failed) for r in hist)
+    assert (tel.comp_count > 0).sum() > 0
+    # churn: EWMA online fraction must have left the all-online prior
+    assert np.any(tel.online_frac < 1.0)
+    assert tel.cadence_s > 0.0
+    # sync merges land immediately: staleness history stays at lag 0
+    assert np.all(tel.staleness_ewma == 0.0)
+
+
+def test_async_engine_feeds_telemetry(mlp_task, fl_data):
+    cfg = FLConfig(scenario="high-churn", mode="async", async_concurrency=9,
+                   staleness="polynomial", **KW)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    srv.run(build_policy("fedavg"), rounds=6)
+    tel = srv.telemetry
+    assert tel.selection_count.sum() > 0
+    assert (tel.comp_count > 0).sum() > 0
+    assert tel.merge_count.sum() > 0
+    assert tel.cadence_s > 0.0
+    ctx = srv._ctx()
+    exp = ctx.expected_staleness(np.arange(ctx.n))
+    assert exp.shape == (ctx.n,) and np.all(np.isfinite(exp)) \
+        and np.all(exp >= 0.0)
+
+
+def test_expected_staleness_without_telemetry_is_zero(mlp_task, fl_data):
+    from repro.fl.server import RoundContext
+
+    ctx = RoundContext(round=0, n=4, k=2, sys=None,
+                       est_t_round=np.ones(4), est_e_round=np.ones(4),
+                       data_sizes=np.ones(4), last_loss=np.ones(4),
+                       loss_age=np.zeros(4))
+    np.testing.assert_array_equal(ctx.expected_staleness(np.arange(4)),
+                                  np.zeros(4))
+
+
+# ---------------------------------------------------------------------------
+# loss_age / last_loss under the async virtual clock (the PR-4 fix)
+# ---------------------------------------------------------------------------
+
+
+def test_async_loss_age_advances_with_virtual_clock(mlp_task, fl_data):
+    """loss_age means "scenario rounds since last_loss was observed" in BOTH
+    regimes.  Previously the async engine bumped it once per dispatch wave —
+    frozen across availability gaps, inflated when several waves fired in
+    one round.  Now it follows the virtual clock: a never-observed device's
+    age equals the scenario rounds elapsed since the engine started."""
+    cfg = FLConfig(scenario="nightly-chargers", mode="async",
+                   async_concurrency=6, **KW)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    srv.run(build_policy("fedavg"), rounds=6)
+    rounds_elapsed = srv.pool.round_idx - 1   # engine starts at pool round 1
+    assert rounds_elapsed > 0
+    never_observed = srv.last_loss == 3.0     # server's initial loss fill
+    assert never_observed.any(), "scenario too small to leave idle devices"
+    np.testing.assert_array_equal(srv.loss_age[never_observed],
+                                  np.full(never_observed.sum(),
+                                          rounds_elapsed))
+    # observed devices were reset at their completion event and re-aged
+    assert np.all(srv.loss_age <= rounds_elapsed)
+    assert srv.loss_age[~never_observed].min() < rounds_elapsed
+
+
+def test_sync_loss_age_semantics_unchanged(mlp_task, fl_data):
+    srv = FLServer(FLConfig(**KW), mlp_task, fl_data)
+    srv.run(build_policy("fedavg"))
+    untouched = srv.last_loss == 3.0
+    assert untouched.any()
+    np.testing.assert_array_equal(srv.loss_age[untouched],
+                                  np.full(untouched.sum(), float(KW["rounds"])))

@@ -297,25 +297,40 @@ class _LegacyDevicePool:
 def run_fleet_bench(sizes=(10_000, 100_000), steps: int = 5, repeats: int = 3,
                     verbose: bool = True):
     """Build + per-round simulator work for the vectorized DevicePool vs the
-    seed per-object reference.  One "step" is what the seed server did every
-    round: advance the dynamics, rebuild the system state, and recompute the
-    static estimates (the current server caches the round-invariant
-    estimates once, so the vectorized side only pays advance+state).  Best
-    of ``repeats`` (min is the stable estimator under allocator noise)."""
+    seed per-object reference, plus the trace-replay fleet
+    (``trace-synthetic-week`` resampled to the same size — the acceptance
+    bar is that a trace fleet builds/steps in the same order of magnitude
+    as the vectorized synthetic scenarios).  One "step" is what the seed
+    server did every round: advance the dynamics, rebuild the system state,
+    and recompute the static estimates (the current server caches the
+    round-invariant estimates once, so the vectorized side only pays
+    advance+state).  Best of ``repeats`` (min is the stable estimator under
+    allocator noise)."""
     import numpy as np
 
+    from repro.fl.scenarios import get_scenario
     from repro.fl.simulation import DevicePool, static_estimates
+
+    # one-time source-trace synthesis+compilation is process-wide (memoized
+    # per TraceSpec); pay it before timing so rows measure fleet work
+    trace_spec = get_scenario("trace-synthetic-week")
+    trace_spec.trace.trace()
+
+    def _trace_pool(n, seed=0):
+        return trace_spec.build(n, seed=seed)
 
     rows = []
     for n in sizes:
         fpe = np.full(n, 1e9)
         timings = {}
-        for name, cls in (("legacy", _LegacyDevicePool), ("vectorized", DevicePool)):
+        for name, cls in (("legacy", _LegacyDevicePool),
+                          ("vectorized", DevicePool),
+                          ("trace", _trace_pool)):
             build_s, step_s = float("inf"), float("inf")
             for _ in range(repeats):
                 t0 = time.perf_counter()
                 pool = cls(n, seed=0)
-                if name == "vectorized":
+                if name != "legacy":
                     static_estimates(pool, fpe, 1e6, 3)   # cached by the server
                 build_s = min(build_s, time.perf_counter() - t0)
                 t0 = time.perf_counter()
@@ -327,12 +342,16 @@ def run_fleet_bench(sizes=(10_000, 100_000), steps: int = 5, repeats: int = 3,
                 step_s = min(step_s, (time.perf_counter() - t0) / steps)
             timings[name] = (build_s, step_s)
         (lb, ls), (vb, vs) = timings["legacy"], timings["vectorized"]
+        tb, ts = timings["trace"]
         row = {"bench": "fleet_scale", "n_devices": n, "steps": steps,
                "legacy_build_s": round(lb, 4), "vectorized_build_s": round(vb, 5),
                "legacy_step_s": round(ls, 4), "vectorized_step_s": round(vs, 5),
+               "trace_build_s": round(tb, 5), "trace_step_s": round(ts, 5),
                "build_speedup": round(lb / vb, 1),
                "step_speedup": round(ls / vs, 1),
-               "build_plus_step_speedup": round((lb + ls) / (vb + vs), 1)}
+               "build_plus_step_speedup": round((lb + ls) / (vb + vs), 1),
+               "trace_build_vs_vectorized": round(tb / vb, 2),
+               "trace_step_vs_vectorized": round(ts / vs, 2)}
         rows.append(row)
         if verbose:
             print(json.dumps(row), flush=True)

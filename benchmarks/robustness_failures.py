@@ -17,7 +17,10 @@ those trajectories to per-scenario ToA/EoA tables.
 
 Quick mode (CI) runs 3 scenarios x 2 policies x 2 rounds on a tiny fleet —
 enough to catch a rotted driver, not enough to draw conclusions.  Async
-quick rows cover ``uniform`` and ``high-churn`` only.
+quick rows cover ``uniform`` and ``high-churn`` only, unless scenarios are
+named explicitly (the CI trace-smoke passes ``--scenarios trace-livelab
+trace-synthetic-week`` to exercise the replayed-trace path under both
+regimes — see :mod:`repro.fl.traces`).
 """
 from __future__ import annotations
 
@@ -52,6 +55,7 @@ def run(scenarios: Optional[Sequence[str]] = None,
         modes: Optional[Sequence[str]] = None,
         rounds: int = 25, k: int = 5, n_devices: int = 40, seed: int = 0,
         quick: bool = False, verbose: bool = True) -> List[Dict]:
+    explicit_scenarios = scenarios is not None
     if quick:
         rounds, k, n_devices = 2, 3, 16
         scenarios = list(scenarios or QUICK_SCENARIOS)
@@ -70,7 +74,8 @@ def run(scenarios: Optional[Sequence[str]] = None,
     rows = []
     for scenario in scenarios:
         for mode in modes:
-            if quick and mode == "async" and scenario not in QUICK_ASYNC_SCENARIOS:
+            if (quick and not explicit_scenarios and mode == "async"
+                    and scenario not in QUICK_ASYNC_SCENARIOS):
                 continue
             env_kw = dict(ASYNC_KW, async_concurrency=3 * k) if mode == "async" \
                 else {}

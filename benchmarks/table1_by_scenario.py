@@ -16,6 +16,12 @@ The accuracy target per scenario is ``target_frac`` (default 0.95, the
 Table 1 convention) of the *synchronous fedavg* final accuracy in that
 scenario, so sync and async rows of one scenario share a target and their
 ToA values are directly comparable.
+
+Trace-driven rows (``trace-livelab`` / ``trace-synthetic-week``, see
+:mod:`repro.fl.traces`) reduce exactly like the synthetic ones — comparing
+a policy's synthetic-scenario row against its trace row is the
+survey-recommended check that the ranking survives realistic availability.
+``--scenarios`` restricts the reduction (e.g. to just the trace rows).
 """
 from __future__ import annotations
 
@@ -38,9 +44,13 @@ def _first_crossing(trajectory: List[Dict], target: float):
     return None, None, None
 
 
-def reduce_rows(results: List[Dict], target_frac: float = 0.95) -> List[Dict]:
+def reduce_rows(results: List[Dict], target_frac: float = 0.95,
+                scenarios: Optional[List[str]] = None) -> List[Dict]:
     """One output row per (scenario, mode, policy) with ToA/EoA against the
-    scenario's shared target and ratios against the same-mode fedavg."""
+    scenario's shared target and ratios against the same-mode fedavg;
+    ``scenarios`` optionally restricts which ones are reduced."""
+    if scenarios is not None:
+        results = [r for r in results if r["scenario"] in scenarios]
     by_key = {(r["scenario"], r.get("mode", "sync"), r["policy"]): r
               for r in results}
     scenarios = sorted({r["scenario"] for r in results})
@@ -78,7 +88,8 @@ def reduce_rows(results: List[Dict], target_frac: float = 0.95) -> List[Dict]:
 
 def run(bench_path: str = "BENCH_scenarios.json",
         target_frac: float = 0.95, verbose: bool = True,
-        out: Optional[str] = None) -> List[Dict]:
+        out: Optional[str] = None,
+        scenarios: Optional[List[str]] = None) -> List[Dict]:
     try:
         with open(bench_path) as f:
             payload = json.load(f)
@@ -89,7 +100,8 @@ def run(bench_path: str = "BENCH_scenarios.json",
     if payload.get("quick"):
         print("# NOTE: input was produced with --quick (2 rounds, tiny "
               "fleet) — rankings are smoke-level only")
-    rows = reduce_rows(payload["results"], target_frac=target_frac)
+    rows = reduce_rows(payload["results"], target_frac=target_frac,
+                       scenarios=scenarios)
     if out:
         with open(out, "w") as f:
             json.dump(rows, f, indent=1)
@@ -108,8 +120,12 @@ def main() -> None:
                          "final accuracy per scenario")
     ap.add_argument("--out", default=None,
                     help="optionally also write the reduced table as JSON")
+    ap.add_argument("--scenarios", nargs="*", default=None,
+                    help="restrict the reduction to these scenarios "
+                         "(e.g. trace-livelab trace-synthetic-week)")
     args = ap.parse_args()
-    run(args.bench, target_frac=args.target_frac, out=args.out)
+    run(args.bench, target_frac=args.target_frac, out=args.out,
+        scenarios=args.scenarios)
 
 
 if __name__ == "__main__":

@@ -124,7 +124,9 @@ class OortPolicy(_Base):
         self.alpha = alpha
         self.explore_frac = explore_frac
 
-    def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
+    def _utilities(self, ctx: RoundContext) -> np.ndarray:
+        """(N,) oort utility per device (the telemetry-aware subclass hooks
+        in here; selection around it is shared)."""
         states = np.stack([
             ctx.est_t_round / 5.0,                 # est per-epoch compute time
             ctx.sys.t_comm, ctx.sys.e_comp, ctx.sys.e_comm,
@@ -133,6 +135,10 @@ class OortPolicy(_Base):
         # oort's over-participation decay + staleness exploration bonus
         util = util / np.sqrt(1.0 + ctx.selection_count)
         util = util * (1.0 + 0.1 * np.sqrt(ctx.loss_age / (1.0 + ctx.round)))
+        return util
+
+    def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
+        util = self._utilities(ctx)
         avail = ctx.available_ids()
         k = min(ctx.k, len(avail))
         n_explore = int(round(self.explore_frac * k))
@@ -143,6 +149,42 @@ class OortPolicy(_Base):
         if n_explore > 0:
             chosen += list(ctx.rng.choice(rest, size=n_explore, replace=False))
         return np.asarray(chosen)
+
+
+class OortTelemetryPolicy(OortPolicy):
+    """Oort whose utility reads the same :class:`DeviceTelemetry` history
+    the learned policies see — the telemetry-aware analytical baseline that
+    makes the learned-vs-analytical comparison fair on *history*, not just
+    instantaneous state.
+
+    Three multiplicative discounts on the plain-oort utility, each exactly
+    1 while the telemetry holds no observations (so with empty telemetry
+    this policy is bit-for-bit plain Oort — same utilities, same RNG
+    consumption):
+
+    * **EWMA online fraction** — devices that keep vanishing between
+      observation instants are worth proportionally less;
+    * **observed dropout rate** — mid-round failures forfeit the round's
+      work, so utility scales by the observed success probability;
+    * **observed slowdown** — where the telemetry's completion-time EWMA
+      exceeds the static-profile estimate (interference, thermal
+      throttling), the oort latency penalty re-applies on the *observed*
+      time: ``(est/obs)^alpha`` capped at 1.
+    """
+
+    name = "oort-telemetry"
+
+    def _utilities(self, ctx: RoundContext) -> np.ndarray:
+        util = super()._utilities(ctx)
+        tel = ctx.telemetry
+        if tel is None:
+            return util
+        ids = np.arange(ctx.n)
+        util = util * tel.online_frac                 # prior 1.0 => no-op
+        util = util * (1.0 - tel.dropout_rate(ids))   # 0/0 counts => 0 rate
+        t_obs = tel.expected_completion_s(ids, ctx.est_t_round)
+        slowdown = ctx.est_t_round / np.maximum(t_obs, 1e-9)
+        return util * np.clip(slowdown, 0.0, 1.0) ** self.alpha
 
 
 class FavorPolicy(_Base):

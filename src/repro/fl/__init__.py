@@ -32,11 +32,26 @@ from repro.fl.scenarios import (
     get_scenario,
     register_scenario,
 )
+from repro.fl.traces import (
+    ResampledFleet,
+    SyntheticTraceSpec,
+    Trace,
+    TraceAvailability,
+    TraceLoad,
+    TraceSpec,
+    read_trace_csv,
+    sample_trace_path,
+    synthesize_trace,
+    write_trace_csv,
+)
 
 __all__ = [
     "DevicePool", "DeviceProfile", "RoundSystemState",
     "ScenarioSpec", "build_scenario", "register_scenario", "get_scenario",
     "available_scenarios",
+    "Trace", "ResampledFleet", "TraceSpec", "TraceLoad", "TraceAvailability",
+    "SyntheticTraceSpec", "synthesize_trace",
+    "read_trace_csv", "write_trace_csv", "sample_trace_path",
     "MLPTask", "LMTask", "ClientTask",
     "local_train", "probing_epoch", "make_parallel_local_train",
     "fedavg", "weighted_delta_aggregate",

@@ -16,6 +16,10 @@ Registered names (see :func:`available_policies`):
 * ``fedprox`` — same selection, conventional name for prox runs
 * ``afl``, ``tifl``, ``oort``, ``favor``, ``fedmarl`` — the paper's
   heuristic/learning baselines
+* ``oort-telemetry`` — Oort with its utility discounted by the
+  :class:`repro.fl.telemetry.DeviceTelemetry` history (EWMA online
+  fraction, observed dropout rate, observed completion-time slowdown);
+  with empty telemetry it reduces exactly to ``oort``
 * ``fedrank``, ``fedrank-I``, ``fedrank-P``, ``fedrank-IP`` — the paper's
   policy and its no-IL / no-rank-loss / plain-DQN ablations (pass
   ``qnet=...`` for the IL-pretrained variants; ``feature_set="telemetry"``
@@ -59,6 +63,7 @@ def _populate() -> None:
         FavorPolicy,
         FedMarlPolicy,
         OortPolicy,
+        OortTelemetryPolicy,
         RandomPolicy,
         TiFLPolicy,
     )
@@ -79,6 +84,7 @@ def _populate() -> None:
     add("afl", AFLPolicy)
     add("tifl", TiFLPolicy)
     add("oort", OortPolicy)
+    add("oort-telemetry", OortTelemetryPolicy)
     add("favor", FavorPolicy)
     add("fedmarl", FedMarlPolicy)
     add("fedrank", fedrank("full"))

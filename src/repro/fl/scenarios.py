@@ -25,7 +25,13 @@ A :class:`ScenarioSpec` composes those axes declaratively:
   (:class:`FailureModel`: Bernoulli dropout + deadline-based straggler
   timeout with sunk-cost accounting in
   :func:`repro.fl.simulation.plan_round_latency` /
-  :func:`~repro.fl.simulation.plan_round_energy`).
+  :func:`~repro.fl.simulation.plan_round_energy`);
+* **trace** — optionally a :class:`repro.fl.traces.TraceSpec`: a
+  replayable device trace (LiveLab-format CSV or the deterministic
+  synthetic generator) that *replaces* the load and availability axes
+  with one coherent per-device timeline (:class:`~repro.fl.traces.TraceLoad`
+  / :class:`~repro.fl.traces.TraceAvailability` share a single
+  bootstrapped fleet), resampled to the pool size at build time.
 
 All models are frozen dataclasses with a functional state API
 (``init_state(n, rng) -> state``, ``step(state, rng, round_idx) -> state``)
@@ -46,6 +52,8 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
+
+from repro.fl.traces import SyntheticTraceSpec, TraceSpec, sample_trace_path
 
 
 # ---------------------------------------------------------------------------
@@ -302,13 +310,20 @@ class ScenarioSpec:
     load: Any = field(default_factory=MarkovLoad)
     availability: Any = field(default_factory=AlwaysAvailable)
     failures: FailureModel = field(default_factory=FailureModel)
+    trace: Optional[TraceSpec] = None     # replaces load+availability with a
+    #                                       coherent replayed device trace
 
     def build(self, n_devices: int, seed: int = 0):
         from repro.fl.simulation import DevicePool
 
+        load, availability = self.load, self.availability
+        if self.trace is not None:
+            # one resolve => load and availability replay the SAME
+            # bootstrapped fleet (deterministic in (spec, n_devices, seed))
+            load, availability = self.trace.resolve(n_devices, seed=seed)
         return DevicePool(n_devices, seed=seed, tier_probs=list(self.tier_probs),
-                          tiers=self.tiers, load_model=self.load,
-                          availability=self.availability, failures=self.failures)
+                          tiers=self.tiers, load_model=load,
+                          availability=availability, failures=self.failures)
 
 
 _SCENARIOS: Dict[str, ScenarioSpec] = {}
@@ -387,6 +402,28 @@ register_scenario(ScenarioSpec(
                 "against who will still be there at upload time.",
     availability=ChurnAvailability(p_drop=0.2, p_join=0.4),
     failures=FailureModel(dropout=0.1),
+))
+
+register_scenario(ScenarioSpec(
+    name="trace-livelab",
+    description="Replays the shipped LiveLab-format sample trace (8 source "
+                "devices over 3 days, bootstrapped to the fleet size): "
+                "coherent per-device usage/charging/offline timelines with "
+                "mild mid-round dropout.  Swap in your own trace via "
+                "FLConfig.trace_csv.",
+    trace=TraceSpec(csv=sample_trace_path()),
+    failures=FailureModel(dropout=0.05),
+))
+
+register_scenario(ScenarioSpec(
+    name="trace-synthetic-week",
+    description="A synthetic week of realistic device behavior (nightly "
+                "charging, daytime sessions, weekend shift, offline spells) "
+                "from the deterministic generator — the trace analogue of "
+                "nightly-chargers, bit-for-bit reproducible with no data "
+                "files.",
+    trace=TraceSpec(synthetic=SyntheticTraceSpec(n_devices=32, days=7,
+                                                 seed=11)),
 ))
 
 register_scenario(ScenarioSpec(

@@ -92,6 +92,10 @@ class FLConfig:
     prox_mu: float = 0.0          # >0 => FedProx local objective
     probe_factor: float = 3.0     # probing candidate pool = probe_factor * K
     scenario: str = "uniform"     # fleet environment (repro.fl.scenarios)
+    trace_csv: Optional[str] = None   # LiveLab-format trace CSV replayed as
+    #                               the scenario's load+availability (swaps
+    #                               the named scenario's TraceSpec source —
+    #                               see repro.fl.traces)
     failure_rate: float = 0.0     # extra Bernoulli dropout layered on top of
     #                               the scenario's failure model
     executor: str = "sequential"  # client-executor name (repro.fl.engine)
@@ -232,8 +236,21 @@ class FLServer:
         self.task = task
         self.data = data
         self.executor = executor or make_executor(cfg.executor)
+        scenario_kw = {}
+        if cfg.trace_csv is not None:
+            # replay the user's trace under the named scenario's tier mix
+            # and failure model; if the scenario is already trace-driven,
+            # swap the SOURCE only and keep its replay knobs
+            # (online_states, seconds_per_round, ...)
+            from repro.fl.scenarios import get_scenario
+            from repro.fl.traces import TraceSpec
+
+            prior = get_scenario(cfg.scenario).trace
+            scenario_kw["trace"] = (
+                dataclasses.replace(prior, csv=cfg.trace_csv, synthetic=None)
+                if prior is not None else TraceSpec(csv=cfg.trace_csv))
         self.pool = pool or build_scenario(cfg.scenario, cfg.n_devices,
-                                           seed=cfg.seed)
+                                           seed=cfg.seed, **scenario_kw)
         if cfg.failure_rate > 0:
             # legacy knob: layer extra Bernoulli dropout over the scenario
             self.pool.failures = dataclasses.replace(

@@ -1,0 +1,41 @@
+"""Trace-driven workloads: replayable device traces, ingestion to models.
+
+The subsystem in three layers (see the module docstrings for depth):
+
+* :mod:`repro.fl.traces.trace` — the LiveLab-format CSV schema, the
+  compiled struct-of-arrays :class:`Trace`, and bootstrap resampling to
+  arbitrary fleet sizes (:class:`ResampledFleet`);
+* :mod:`repro.fl.traces.synthetic` — a deterministic synthetic-trace
+  generator (:func:`synthesize_trace`), so no external data is required
+  (CLI: ``tools/make_trace.py``);
+* :mod:`repro.fl.traces.models` — :class:`TraceLoad` /
+  :class:`TraceAvailability` scenario models replaying one shared fleet,
+  and the declarative :class:`TraceSpec` carried by
+  ``ScenarioSpec.trace``.
+
+Entry points: the registered ``trace-livelab`` / ``trace-synthetic-week``
+scenarios (:mod:`repro.fl.scenarios`) and ``FLConfig.trace_csv``.
+"""
+from repro.fl.traces.models import TraceAvailability, TraceLoad, TraceSpec
+from repro.fl.traces.synthetic import SyntheticTraceSpec, synthesize_trace
+from repro.fl.traces.trace import (
+    DEFAULT_ONLINE_STATES,
+    DEFAULT_STATE_LOADS,
+    STATE_CODES,
+    STATE_NAMES,
+    ResampledFleet,
+    Trace,
+    compile_events,
+    read_trace_csv,
+    sample_trace_path,
+    write_trace_csv,
+)
+
+__all__ = [
+    "Trace", "ResampledFleet", "compile_events",
+    "read_trace_csv", "write_trace_csv", "sample_trace_path",
+    "STATE_NAMES", "STATE_CODES",
+    "DEFAULT_STATE_LOADS", "DEFAULT_ONLINE_STATES",
+    "SyntheticTraceSpec", "synthesize_trace",
+    "TraceLoad", "TraceAvailability", "TraceSpec",
+]

@@ -1,0 +1,178 @@
+"""Trace-backed scenario models: replay a compiled trace as load/availability.
+
+:class:`TraceLoad` and :class:`TraceAvailability` implement the scenario
+subsystem's load/availability protocols (``init_state`` / ``step`` /
+``loads`` | ``mask`` — see :mod:`repro.fl.scenarios`) over one shared
+:class:`~repro.fl.traces.trace.ResampledFleet`, so a fleet device's
+interference and its reachability come from the SAME source-device timeline
+— a device that is ``offline`` in the trace is simultaneously unavailable
+and (when it returns) unloaded, which no pair of independent synthetic
+models can guarantee.
+
+Replay is a pure function of ``(trace, n, seed, round_idx)``: the models
+consume **no RNG** at init or step time, so trace scenarios are bit-for-bit
+deterministic across engines and across runs, and the async engine's lazy
+round replay (:meth:`repro.fl.simulation.DevicePool.advance_to`) is free.
+
+Scenario rounds sample the trace clock: round ``r`` reads the trace at
+``r * seconds_per_round`` (per device, plus its resample phase).
+``TraceAvailability.next_transition`` is exact: it returns the first future
+round whose sampled mask actually differs — computed from the compiled
+timelines, matching brute-force per-round stepping — which is what lets the
+async engine's virtual clock jump straight between trace events.
+
+:class:`TraceSpec` is the declarative form carried by
+:class:`repro.fl.scenarios.ScenarioSpec`: a trace *source* (CSV path or
+synthetic-generator params) plus replay knobs, resolved and compiled (with
+caching) only when a fleet is built.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.fl.traces.synthetic import SyntheticTraceSpec, synthesize_trace
+from repro.fl.traces.trace import (
+    DEFAULT_ONLINE_STATES,
+    DEFAULT_STATE_LOADS,
+    STATE_CODES,
+    STATE_NAMES,
+    ResampledFleet,
+    Trace,
+    read_trace_csv,
+)
+
+
+def _check_n(fleet: ResampledFleet, n: int) -> None:
+    if n != fleet.n:
+        raise ValueError(
+            f"trace fleet was resampled to {fleet.n} devices but the "
+            f"scenario is building {n} — resolve the TraceSpec with the "
+            "pool's n_devices (ScenarioSpec.build does this)")
+
+
+@dataclass(frozen=True, eq=False)
+class TraceLoad:
+    """Interference replay: per-state load multipliers over the fleet's
+    trace timeline (``loads_by_state`` indexed by state code)."""
+
+    fleet: ResampledFleet
+    seconds_per_round: float = 3600.0
+    loads_by_state: Tuple[float, ...] = DEFAULT_STATE_LOADS
+
+    def init_state(self, n: int, rng: np.random.Generator):
+        _check_n(self.fleet, n)
+        return None                        # replay is stateless (and RNG-free)
+
+    def step(self, state, rng: np.random.Generator, round_idx: int):
+        return state
+
+    def loads(self, state, round_idx: int) -> np.ndarray:
+        codes = self.fleet.states_at(round_idx * self.seconds_per_round)
+        return np.asarray(self.loads_by_state, dtype=np.float64)[codes]
+
+
+@dataclass(frozen=True, eq=False)
+class TraceAvailability:
+    """Reachability replay: a device is online iff its trace state is in
+    ``online_states`` (default: everything but ``offline``; pass
+    ``("charging",)`` for Google-style charging-window eligibility)."""
+
+    fleet: ResampledFleet
+    seconds_per_round: float = 3600.0
+    online_states: Tuple[str, ...] = DEFAULT_ONLINE_STATES
+
+    def _online_lut(self) -> np.ndarray:
+        lut = np.zeros(len(STATE_NAMES), dtype=bool)
+        for name in self.online_states:
+            lut[STATE_CODES[name]] = True
+        return lut
+
+    def init_state(self, n: int, rng: np.random.Generator):
+        _check_n(self.fleet, n)
+        return None
+
+    def step(self, state, rng: np.random.Generator, round_idx: int):
+        return state
+
+    def mask(self, state, round_idx: int) -> np.ndarray:
+        codes = self.fleet.states_at(round_idx * self.seconds_per_round)
+        return self._online_lut()[codes]
+
+    def rounds_per_period(self) -> int:
+        return int(np.ceil(self.fleet.trace.period_s / self.seconds_per_round
+                           - 1e-9))
+
+    def next_transition(self, state, round_idx: int) -> Optional[int]:
+        """EXACT next round at which the sampled mask changes (``None`` =
+        never), from the compiled timelines — the contract the async
+        engine's virtual clock jumps on.
+
+        The sampled mask at round ``r`` is the trace read at
+        ``r * seconds_per_round``; when the period is a whole number of
+        rounds the sample sequence repeats every ``rounds_per_period()``
+        rounds, so a full period with no change proves it never changes
+        (cf. :meth:`repro.fl.scenarios.DiurnalAvailability.next_transition`).
+        With a misaligned period the sampling phase drifts, so after a
+        changeless period we conservatively report the next round after the
+        scanned window instead of ``None``."""
+        R = self.rounds_per_period()
+        cur = self.mask(state, round_idx)
+        for r in range(round_idx + 1, round_idx + R + 1):
+            if not np.array_equal(self.mask(state, r), cur):
+                return r
+        aligned = abs(self.fleet.trace.period_s
+                      % self.seconds_per_round) < 1e-9
+        return None if aligned else round_idx + R + 1
+
+
+# ---------------------------------------------------------------------------
+# declarative spec (carried by ScenarioSpec)
+# ---------------------------------------------------------------------------
+
+_TRACE_CACHE: Dict[object, Trace] = {}
+
+
+@dataclass(frozen=True)
+class TraceSpec:
+    """Declarative trace source + replay knobs.  A pure value: compiling
+    the source and bootstrapping the fleet happen only in
+    :meth:`resolve`, memoized per source, so registering a trace scenario
+    costs nothing until it is built.
+
+    Exactly one of ``csv`` (LiveLab-format CSV path) or ``synthetic``
+    (generator params) must be set.
+    """
+
+    csv: Optional[str] = None
+    synthetic: Optional[SyntheticTraceSpec] = None
+    seconds_per_round: float = 3600.0    # scenario rounds per trace hour
+    phase_jitter_s: float = 1800.0       # per-device resample phase jitter
+    loads_by_state: Tuple[float, ...] = DEFAULT_STATE_LOADS
+    online_states: Tuple[str, ...] = DEFAULT_ONLINE_STATES
+
+    def __post_init__(self):
+        if (self.csv is None) == (self.synthetic is None):
+            raise ValueError(
+                "TraceSpec needs exactly one source: csv=<path> OR "
+                "synthetic=SyntheticTraceSpec(...)")
+
+    def trace(self) -> Trace:
+        """The compiled source trace (memoized per CSV path / synth spec)."""
+        key = ("csv", self.csv) if self.csv else ("synth", self.synthetic)
+        if key not in _TRACE_CACHE:
+            _TRACE_CACHE[key] = (read_trace_csv(self.csv) if self.csv
+                                 else synthesize_trace(self.synthetic))
+        return _TRACE_CACHE[key]
+
+    def resolve(self, n_devices: int, seed: int = 0
+                ) -> Tuple[TraceLoad, TraceAvailability]:
+        """Compile + bootstrap to ``n_devices`` and return the coherent
+        (load, availability) model pair sharing ONE resampled fleet."""
+        fleet = self.trace().resample(n_devices, seed=seed,
+                                      phase_jitter_s=self.phase_jitter_s)
+        return (TraceLoad(fleet, self.seconds_per_round, self.loads_by_state),
+                TraceAvailability(fleet, self.seconds_per_round,
+                                  self.online_states))

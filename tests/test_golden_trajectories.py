@@ -25,7 +25,9 @@ from repro.fl import FLConfig, FLServer, build_policy
 GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
 
 # (scenario, mode, policy): two named scenarios x both regimes, plus the
-# probing path (fedrank exercises probe_set/select/observe + the Q-net)
+# probing path (fedrank exercises probe_set/select/observe + the Q-net) and
+# the trace-replay path (trace-synthetic-week pins the whole traces
+# subsystem: synth generation, compilation, resampling, replay)
 CASES = [
     ("high-churn", "sync", "fedavg"),
     ("high-churn", "async", "fedavg"),
@@ -33,6 +35,8 @@ CASES = [
     ("nightly-chargers", "async", "fedavg"),
     ("high-churn", "sync", "fedrank"),
     ("high-churn", "async", "fedrank"),
+    ("trace-synthetic-week", "sync", "fedavg"),
+    ("trace-synthetic-week", "async", "fedavg"),
 ]
 
 

@@ -272,8 +272,8 @@ def test_policies_respect_availability(mlp_task, fl_data):
     would raise if any probed/selected an offline device)."""
     from repro.fl import build_policy
 
-    for name in ("fedavg", "afl", "tifl", "oort", "favor", "fedmarl",
-                 "fedrank-IP"):
+    for name in ("fedavg", "afl", "tifl", "oort", "oort-telemetry", "favor",
+                 "fedmarl", "fedrank-IP"):
         cfg = FLConfig(n_devices=20, k_select=4, rounds=3, l_ep=2, lr=0.1,
                        seed=1, scenario="high-churn")
         srv = FLServer(cfg, mlp_task, fl_data)

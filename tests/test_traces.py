@@ -1,0 +1,377 @@
+"""Trace subsystem tests: CSV round-trip, compiled-lookup correctness,
+resample determinism, exact next_transition, scenario/FLConfig threading,
+and the telemetry-aware oort baseline's empty-telemetry parity."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.fl import FLConfig, FLServer, build_policy, build_scenario
+from repro.fl.scenarios import get_scenario
+from repro.fl.traces import (
+    DEFAULT_ONLINE_STATES,
+    STATE_CODES,
+    STATE_NAMES,
+    SyntheticTraceSpec,
+    Trace,
+    TraceAvailability,
+    TraceLoad,
+    TraceSpec,
+    compile_events,
+    read_trace_csv,
+    sample_trace_path,
+    synthesize_trace,
+    write_trace_csv,
+)
+
+DAY = 86400.0
+
+
+def _toy_trace(period_s=DAY):
+    """Two devices with hand-written timelines (seconds)."""
+    ev = {
+        "a": [(0.0, STATE_CODES["idle"]), (3600.0, STATE_CODES["active"]),
+              (7200.0, STATE_CODES["offline"]), (10800.0, STATE_CODES["idle"])],
+        # first event after 0: wrap rule fills [0, 1800) with the LAST state
+        "b": [(1800.0, STATE_CODES["idle"]), (43200.0, STATE_CODES["charging"])],
+    }
+    return compile_events(ev, period_s)
+
+
+# ---------------------------------------------------------------------------
+# compile + lookup semantics
+# ---------------------------------------------------------------------------
+
+
+def test_compile_wrap_and_merge():
+    tr = _toy_trace()
+    t_b, s_b = tr.segments_of(0)          # device ids sorted: "a" is 0
+    assert t_b[0] == 0.0
+    # device b: wrap segment [0, 1800) holds its last state (charging)
+    t, s = tr.segments_of(1)
+    assert t[0] == 0.0 and s[0] == STATE_CODES["charging"]
+    # consecutive duplicate states merge
+    ev = {"x": [(0.0, 2), (10.0, 2), (20.0, 1)]}
+    tr2 = compile_events(ev, 100.0)
+    t, s = tr2.segments_of(0)
+    assert list(t) == [0.0, 20.0] and list(s) == [2, 1]
+
+
+def test_states_at_segment_boundaries_and_wrap():
+    tr = _toy_trace()
+    dev = np.array([0, 0, 0, 0, 1, 1])
+    t = np.array([0.0, 3600.0, 7199.0, DAY + 3600.0, 0.0, 1800.0])
+    got = tr.states_at(dev, t)
+    want = [STATE_CODES["idle"], STATE_CODES["active"],
+            STATE_CODES["active"], STATE_CODES["active"],   # period wrap
+            STATE_CODES["charging"], STATE_CODES["idle"]]
+    assert list(got) == want
+
+
+def test_compile_same_instant_later_event_wins_by_log_order():
+    # tie-break is input order, NOT state code (offline=0 sorts first)
+    ev = {"x": [(100.0, STATE_CODES["idle"]), (100.0, STATE_CODES["offline"]),
+                (0.0, STATE_CODES["idle"])]}
+    tr = compile_events(ev, 1000.0)
+    t, s = tr.segments_of(0)
+    assert list(t) == [0.0, 100.0]
+    assert list(s) == [STATE_CODES["idle"], STATE_CODES["offline"]]
+    # a same-instant replacement that lands on the previous state merges
+    ev = {"x": [(0.0, STATE_CODES["idle"]), (100.0, STATE_CODES["active"]),
+                (100.0, STATE_CODES["idle"])]}
+    tr = compile_events(ev, 1000.0)
+    t, s = tr.segments_of(0)
+    assert list(t) == [0.0] and list(s) == [STATE_CODES["idle"]]
+
+
+def test_csv_round_trip_high_precision_times(tmp_path):
+    # second-resolution times past ~11 days (and sub-second ones) must
+    # survive the writer exactly — %g-style truncation corrupted them
+    ev = {"x": [(0.0, STATE_CODES["idle"]),
+                (1234567.25, STATE_CODES["offline"]),
+                (2000000.0, STATE_CODES["charging"])]}
+    tr = compile_events(ev, 30 * DAY)
+    p = str(tmp_path / "long.csv")
+    write_trace_csv(tr, p)
+    assert read_trace_csv(p).equals(tr)
+
+
+def test_compile_validation():
+    with pytest.raises(ValueError):
+        compile_events({}, DAY)
+    with pytest.raises(ValueError):
+        compile_events({"a": [(DAY, 1)]}, DAY)        # t >= period
+    with pytest.raises(ValueError):
+        compile_events({"a": [(0.0, 99)]}, DAY)       # unknown code
+    with pytest.raises(ValueError):
+        TraceSpec()                                    # no source
+    with pytest.raises(ValueError):
+        TraceSpec(csv="x.csv", synthetic=SyntheticTraceSpec())  # two sources
+
+
+# ---------------------------------------------------------------------------
+# CSV round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_csv_round_trip(tmp_path):
+    tr = synthesize_trace(SyntheticTraceSpec(n_devices=5, days=2, seed=3))
+    p1, p2 = str(tmp_path / "t1.csv"), str(tmp_path / "t2.csv")
+    write_trace_csv(tr, p1)
+    tr2 = read_trace_csv(p1)
+    assert tr.equals(tr2)
+    # second generation is byte-identical (writer is deterministic too)
+    write_trace_csv(tr2, p2)
+    assert open(p1).read() == open(p2).read()
+
+
+def test_shipped_fixture_parses():
+    tr = read_trace_csv(sample_trace_path())
+    assert tr.n_devices == 8 and tr.period_s == 3 * DAY
+    # every state in the vocabulary appears in the fixture
+    assert set(np.unique(tr.state)) == set(range(len(STATE_NAMES)))
+
+
+def test_csv_rejects_unknown_state(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("device_id,t_s,state\nd0,0,warp\n")
+    with pytest.raises(ValueError, match="unknown state"):
+        read_trace_csv(str(p))
+
+
+# ---------------------------------------------------------------------------
+# resampling
+# ---------------------------------------------------------------------------
+
+
+def test_resample_deterministic_at_10k():
+    tr = synthesize_trace(SyntheticTraceSpec(n_devices=8, days=2, seed=0))
+    a = tr.resample(10_000, seed=4)
+    b = tr.resample(10_000, seed=4)
+    assert np.array_equal(a.src, b.src) and np.array_equal(a.phase_s, b.phase_s)
+    assert np.array_equal(a.states_at(7 * 3600.0), b.states_at(7 * 3600.0))
+    c = tr.resample(10_000, seed=5)
+    assert not np.array_equal(a.src, c.src)
+    # bootstrap covers the source pool and phases stay within the period
+    assert set(np.unique(a.src)) == set(range(8))
+    assert a.phase_s.min() >= 0.0 and a.phase_s.max() < tr.period_s
+
+
+def test_resample_matches_per_device_lookup():
+    """The one-searchsorted fleet lookup == naive per-device scan."""
+    tr = _toy_trace()
+    fleet = tr.resample(64, seed=1)
+    for t in (0.0, 3599.0, 3600.0, 50000.0, DAY - 1.0):
+        got = fleet.states_at(t)
+        for i in range(64):
+            ts, ss = tr.segments_of(int(fleet.src[i]))
+            tau = (t + fleet.phase_s[i]) % tr.period_s
+            k = int(np.searchsorted(ts, tau, side="right")) - 1
+            assert got[i] == ss[k], (i, t)
+
+
+# ---------------------------------------------------------------------------
+# scenario models
+# ---------------------------------------------------------------------------
+
+
+def test_trace_models_share_one_fleet_and_draw_no_rng():
+    spec = TraceSpec(synthetic=SyntheticTraceSpec(n_devices=6, days=2, seed=2))
+    load, avail = spec.resolve(32, seed=9)
+    assert load.fleet is avail.fleet
+    rng = np.random.default_rng(0)
+    s0 = rng.bit_generator.state
+    load.init_state(32, rng)
+    avail.init_state(32, rng)
+    load.step(None, rng, 1)
+    avail.step(None, rng, 1)
+    load.loads(None, 1)
+    avail.mask(None, 1)
+    assert rng.bit_generator.state == s0          # replay is RNG-free
+    with pytest.raises(ValueError, match="resampled to 32"):
+        load.init_state(16, rng)
+
+
+def test_trace_load_availability_coherent():
+    """offline in the trace => unavailable AND (by default) the only
+    unavailable reason: one timeline drives both axes."""
+    spec = TraceSpec(synthetic=SyntheticTraceSpec(n_devices=6, days=3, seed=5,
+                                                  offline_prob_per_day=1.0))
+    load, avail = spec.resolve(48, seed=0)
+    offline_code = STATE_CODES["offline"]
+    saw_offline = False
+    for r in range(72):
+        codes = load.fleet.states_at(r * load.seconds_per_round)
+        mask = avail.mask(None, r)
+        assert np.array_equal(mask, codes != offline_code)
+        saw_offline |= bool((codes == offline_code).any())
+    assert saw_offline
+
+
+def test_next_transition_exact_vs_brute_force():
+    spec = TraceSpec(synthetic=SyntheticTraceSpec(n_devices=5, days=2, seed=7,
+                                                  offline_prob_per_day=0.8))
+    _, avail = spec.resolve(12, seed=3)
+    R = avail.rounds_per_period()
+    assert R == 48
+    for r0 in range(0, 30, 3):
+        cur = avail.mask(None, r0)
+        brute = next((r for r in range(r0 + 1, r0 + R + 1)
+                      if not np.array_equal(avail.mask(None, r), cur)), None)
+        assert avail.next_transition(None, r0) == brute, r0
+
+
+def test_next_transition_never_changes():
+    # one device, always idle => mask constant => None (exact, aligned period)
+    tr = compile_events({"a": [(0.0, STATE_CODES["idle"])]}, DAY)
+    avail = TraceAvailability(tr.resample(8, seed=0, phase_jitter_s=0.0))
+    assert avail.next_transition(None, 0) is None
+    # misaligned period: can't prove periodicity => conservative hint
+    avail2 = TraceAvailability(tr.resample(8, seed=0, phase_jitter_s=0.0),
+                               seconds_per_round=7000.0)
+    nxt = avail2.next_transition(None, 0)
+    assert nxt is not None and nxt > avail2.rounds_per_period()
+
+
+def test_trace_pool_next_transition_matches_pool_stepping():
+    """Through the DevicePool: jumping to next_transition really is the
+    first round the pool's mask changes (the async-engine contract)."""
+    pool = build_scenario("trace-livelab", 24, seed=2)
+    for _ in range(3):
+        mask = pool.available()
+        nxt = pool.next_transition()
+        assert nxt is not None and nxt > pool.round_idx
+        ref = build_scenario("trace-livelab", 24, seed=2)
+        ref.advance_to(pool.round_idx)
+        for r in range(pool.round_idx + 1, nxt):
+            ref.advance_round()
+            assert np.array_equal(ref.available(), mask), r
+        ref.advance_round()
+        assert not np.array_equal(ref.available(), mask)
+        pool.advance_to(nxt)
+
+
+# ---------------------------------------------------------------------------
+# scenario + FLConfig threading
+# ---------------------------------------------------------------------------
+
+
+def test_trace_scenarios_registered():
+    for name in ("trace-livelab", "trace-synthetic-week"):
+        spec = get_scenario(name)
+        assert spec.trace is not None
+        pool = build_scenario(name, 40, seed=1)
+        assert isinstance(pool.load_model, TraceLoad)
+        assert isinstance(pool.availability, TraceAvailability)
+        assert pool.available().any()
+    assert get_scenario("trace-livelab").trace.csv == sample_trace_path()
+
+
+def test_trace_scenario_build_deterministic():
+    a = build_scenario("trace-synthetic-week", 100, seed=6)
+    b = build_scenario("trace-synthetic-week", 100, seed=6)
+    assert np.array_equal(a.load_model.fleet.src, b.load_model.fleet.src)
+    for _ in range(5):
+        a.advance_round(), b.advance_round()
+        assert np.array_equal(a.loads(), b.loads())
+        assert np.array_equal(a.available(), b.available())
+
+
+def test_flconfig_trace_csv_override(mlp_task, fl_data, tmp_path):
+    p = str(tmp_path / "mine.csv")
+    write_trace_csv(synthesize_trace(
+        SyntheticTraceSpec(n_devices=4, days=1, seed=9)), p)
+    cfg = FLConfig(n_devices=20, k_select=3, rounds=1, l_ep=2, seed=0,
+                   scenario="high-churn", trace_csv=p)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    # the trace replaced the scenario's churn model...
+    assert isinstance(srv.pool.availability, TraceAvailability)
+    assert srv.pool.load_model.fleet.trace.equals(read_trace_csv(p))
+    # ...but the named scenario's failure model survived
+    assert srv.pool.failures.dropout == 0.1
+    srv.run(build_policy("fedavg"))
+
+
+def test_flconfig_trace_csv_keeps_trace_scenario_knobs(mlp_task, fl_data,
+                                                       tmp_path):
+    """On an already-trace-driven scenario, trace_csv swaps the SOURCE only
+    — replay knobs like online_states stay as registered."""
+    from repro.fl.scenarios import ScenarioSpec, register_scenario
+
+    register_scenario(ScenarioSpec(
+        name="test-charging-trace",
+        trace=TraceSpec(synthetic=SyntheticTraceSpec(n_devices=4, days=1,
+                                                     seed=1),
+                        online_states=("charging",), seconds_per_round=1800.0)))
+    p = str(tmp_path / "swap.csv")
+    write_trace_csv(synthesize_trace(
+        SyntheticTraceSpec(n_devices=4, days=1, seed=2)), p)
+    cfg = FLConfig(n_devices=20, k_select=3, rounds=1, l_ep=2, seed=0,
+                   scenario="test-charging-trace", trace_csv=p)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    assert srv.pool.availability.online_states == ("charging",)
+    assert srv.pool.availability.seconds_per_round == 1800.0
+    assert srv.pool.load_model.fleet.trace.equals(read_trace_csv(p))
+
+
+def test_trace_sync_bit_for_bit_deterministic(mlp_task, fl_data):
+    def go():
+        cfg = FLConfig(n_devices=20, k_select=3, rounds=2, l_ep=2, seed=4,
+                       scenario="trace-synthetic-week")
+        return FLServer(cfg, mlp_task, fl_data).run(build_policy("fedavg"))
+
+    a, b = go(), go()
+    for ra, rb in zip(a, b):
+        assert ra.acc == rb.acc and ra.r_t == rb.r_t
+        assert np.array_equal(ra.selected, rb.selected)
+
+
+# ---------------------------------------------------------------------------
+# telemetry-aware oort baseline (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_oort_telemetry_empty_telemetry_matches_oort(mlp_task, fl_data):
+    """With no recorded history the discounts are all exactly 1: the first
+    round of oort-telemetry is bit-for-bit plain oort (same utilities, same
+    RNG consumption)."""
+    def first_round(name):
+        cfg = FLConfig(n_devices=20, k_select=4, rounds=1, l_ep=2, seed=8,
+                       scenario="high-churn")
+        srv = FLServer(cfg, mlp_task, fl_data)
+        return srv.run(build_policy(name))[0]
+
+    a, b = first_round("oort"), first_round("oort-telemetry")
+    assert np.array_equal(a.selected, b.selected)
+    assert a.acc == b.acc
+
+
+def test_oort_telemetry_discounts_unreliable_devices():
+    from repro.core.baselines import OortPolicy, OortTelemetryPolicy
+    from repro.fl.telemetry import DeviceTelemetry
+    from repro.fl.server import RoundContext
+    from repro.fl.simulation import RoundSystemState
+
+    n = 8
+    ones = np.ones(n)
+    sys = RoundSystemState(t_comp=ones, t_comm=ones, e_comp=ones,
+                           e_comm=ones, load=ones)
+    tel = DeviceTelemetry(n)
+    ctx = RoundContext(round=0, n=n, k=2, sys=sys, est_t_round=5 * ones,
+                       est_e_round=ones, data_sizes=np.full(n, 10),
+                       last_loss=ones * 2, loss_age=np.zeros(n),
+                       available=np.ones(n, bool),
+                       selection_count=np.zeros(n, np.int64), telemetry=tel,
+                       rng=np.random.default_rng(0))
+    base = OortPolicy()._utilities(ctx)
+    fresh = OortTelemetryPolicy()._utilities(ctx)
+    np.testing.assert_allclose(fresh, base)           # empty history: parity
+    # device 0: flaky (observed offline + dropouts + 4x slower than profile)
+    for _ in range(20):
+        tel.observe_availability(np.arange(n) != 0)
+    tel.observe_selection(np.array([0, 1]))
+    tel.observe_dropouts(np.array([0]))
+    tel.observe_completions(np.array([0, 1]), np.array([20.0, 5.0]))
+    tainted = OortTelemetryPolicy()._utilities(ctx)
+    assert tainted[0] < 0.1 * base[0]
+    np.testing.assert_allclose(tainted[2:], base[2:])  # untouched devices

@@ -358,6 +358,58 @@ def run_fleet_bench(sizes=(10_000, 100_000), steps: int = 5, repeats: int = 3,
     return rows
 
 
+# ---------------------------------------------------------------------------
+# Hierarchical round execution: region-vectorized (stacked) vs sequential
+# ---------------------------------------------------------------------------
+
+
+def run_region_exec_bench(ks=(6, 12), rounds: int = 3, l_ep: int = 2,
+                          verbose: bool = True):
+    """Steady-state wall-clock per hierarchical round with the per-region
+    cohorts executed as ONE stacked executor call (``region_exec="stacked"``,
+    the default — mesh-shardable) vs one executor call per region
+    (``region_exec="sequential"``).  Both paths are numerically identical
+    (see tests/test_topology.py); this times the fan-out.  Equal-size
+    shards (as in :func:`run_fl_executor_bench`) + always-available
+    ``uniform`` fleet carved into 3 regions via ``FLConfig.regions``, so
+    cohort shapes are stable round to round and the comparison isolates
+    call-count, not jit-cache churn or bucket fragmentation."""
+    from repro.data import FederatedData, iid_partition, \
+        make_classification_data
+    from repro.fl import FLConfig, FLServer, MLPTask, build_policy
+
+    n_devices = 30
+    train, test = make_classification_data(n_samples=128 * n_devices, seed=0)
+    parts = iid_partition(len(train.y), n_devices, seed=0, size_skew=0.0)
+    data = FederatedData(train, test, parts)
+    task = MLPTask(dim=32, hidden=32, n_classes=10)
+
+    rows = []
+    for k in ks:
+        per_round = {}
+        for region_exec in ("sequential", "stacked"):
+            cfg = FLConfig(n_devices=n_devices, k_select=k, rounds=rounds,
+                           l_ep=l_ep, lr=0.1, seed=0, executor="vmapped",
+                           regions=3, region_exec=region_exec)
+            srv = FLServer(cfg, task, data)
+            policy = build_policy("fedavg")
+            srv.run_round(policy)              # warmup: jit compile
+            t0 = time.perf_counter()
+            for _ in range(rounds):
+                srv.run_round(policy)
+            per_round[region_exec] = (time.perf_counter() - t0) / rounds
+        row = {"bench": "region_exec", "n_devices": n_devices, "k": k,
+               "n_regions": 3, "l_ep": l_ep,
+               "sequential_round_s": round(per_round["sequential"], 4),
+               "stacked_round_s": round(per_round["stacked"], 4),
+               "speedup": round(per_round["sequential"]
+                                / per_round["stacked"], 2)}
+        rows.append(row)
+        if verbose:
+            print(json.dumps(row), flush=True)
+    return rows
+
+
 def main() -> None:
     # allow_abbrev=False keeps argparse in sync with the literal sys.argv
     # check above that decides the XLA device-count flag
@@ -374,7 +426,9 @@ def main() -> None:
                     help="shrink --fl-modes to a CI smoke")
     ap.add_argument("--fleet", action="store_true",
                     help="time the vectorized DevicePool against the seed "
-                         "per-object fleet at 10k/100k devices")
+                         "per-object fleet at 10k/100k devices, plus "
+                         "region-vectorized vs sequential-region hierarchical "
+                         "round execution")
     args = ap.parse_args()
     if args.fl_modes:
         out = args.out or "results/fl_modes.json"
@@ -386,6 +440,7 @@ def main() -> None:
     if args.fleet:
         out = args.out or "results/fleet_scale.json"
         results = run_fleet_bench()
+        results += run_region_exec_bench()
         os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
         with open(out, "w") as f:
             json.dump(results, f, indent=1)

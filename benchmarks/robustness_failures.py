@@ -34,7 +34,11 @@ from repro.fl import available_scenarios, build_policy
 
 QUICK_SCENARIOS = ("uniform", "high-churn", "stragglers")
 QUICK_ASYNC_SCENARIOS = ("uniform", "high-churn")
-FULL_POLICIES = ("fedavg", "oort", "fedrank")
+# the full sweep compares the learned policy against both analytical
+# telemetry-aware baselines (oort-telemetry and the loss-age+staleness afl)
+# across every named scenario — including the hierarchical/regional ones,
+# where runs route through repro.fl.topology automatically
+FULL_POLICIES = ("fedavg", "oort-telemetry", "afl", "fedrank")
 QUICK_POLICIES = ("fedavg", "fedrank")
 MODES = ("sync", "async")
 # async engine knobs used throughout the sweep: stream the buffer full from
@@ -104,6 +108,10 @@ def run(scenarios: Optional[Sequence[str]] = None,
                     "n_available": r.n_available,
                     "mean_staleness": round(r.mean_staleness, 2),
                     "n_pending": r.n_pending,
+                    # hierarchical runs: per-tier lag means ("region:<name>"
+                    # / "root"); empty dict on flat runs
+                    "tier_staleness": {t: round(v, 2) for t, v
+                                       in sorted(r.tier_staleness.items())},
                 } for r in hist]
                 rows.append({
                     "scenario": scenario,

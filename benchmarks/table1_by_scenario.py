@@ -32,7 +32,23 @@ from typing import Dict, List, Optional
 from benchmarks.common import emit_csv
 
 HEADER = ["scenario", "mode", "policy", "target_acc", "final_acc", "toa_s",
-          "eoa_J", "round_at_target", "speedup_vs_fedavg", "energy_vs_fedavg"]
+          "eoa_J", "round_at_target", "speedup_vs_fedavg", "energy_vs_fedavg",
+          "mean_region_lag", "mean_root_lag"]
+
+
+def _tier_lag_means(trajectory: List[Dict]):
+    """Trajectory-mean region-tier and root-tier lags from the hierarchical
+    ``tier_staleness`` records (``"n/a"`` for flat runs — no topology)."""
+    region, root = [], []
+    for point in trajectory:
+        tiers = point.get("tier_staleness") or {}
+        lags = [v for t, v in tiers.items() if t.startswith("region:")]
+        if lags:
+            region.append(sum(lags) / len(lags))
+        if "root" in tiers:
+            root.append(tiers["root"])
+    return (round(sum(region) / len(region), 3) if region else "n/a",
+            round(sum(root) / len(root), 3) if root else "n/a")
 
 
 def _first_crossing(trajectory: List[Dict], target: float):
@@ -71,6 +87,7 @@ def reduce_rows(results: List[Dict], target_frac: float = 0.95,
                 if s != scenario or m != mode:
                     continue
                 toa, eoa, rnd = _first_crossing(row["trajectory"], target)
+                region_lag, root_lag = _tier_lag_means(row["trajectory"])
                 out.append({
                     "scenario": scenario, "mode": mode, "policy": policy,
                     "target_acc": target,
@@ -82,6 +99,8 @@ def reduce_rows(results: List[Dict], target_frac: float = 0.95,
                                           if toa and t_fed else "n/a"),
                     "energy_vs_fedavg": (round(eoa / e_fed, 3)
                                          if eoa and e_fed else "n/a"),
+                    "mean_region_lag": region_lag,
+                    "mean_root_lag": root_lag,
                 })
     return out
 

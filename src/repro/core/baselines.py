@@ -49,18 +49,47 @@ class RandomPolicy(_Base):
 
 class AFLPolicy(_Base):
     """Active FL: sample with probability conditioned on the current model's
-    per-client valuation (training loss as informativeness), with a softmax
-    temperature and an eps floor of uniform exploration."""
+    per-client valuation, with a softmax temperature and an eps floor of
+    uniform exploration.
+
+    The valuation is the analytical loss-age + staleness-history utility
+    (the second analytical comparison next to ``oort-telemetry``):
+
+    * **informativeness** — normalized training loss (classic AFL);
+    * **loss age** — an exploration bonus ``age_weight * sqrt(age / (1 +
+      round))`` for devices whose loss is stale bookkeeping (never probed,
+      long offline): their valuation is uncertain, so they deserve a look —
+      without it AFL's softmax keeps resampling whoever it saw recently;
+    * **staleness history** — a penalty ``stale_weight * staleness_ewma``
+      from :class:`~repro.fl.telemetry.DeviceTelemetry`: devices whose
+      merged updates historically arrive many model versions late dilute
+      (or are down-weighted out of) the aggregate, so their expected
+      contribution is discounted up front.  Zero until a device has a
+      merge history, so the upgraded valuation reduces exactly to classic
+      AFL on the first rounds (and forever in telemetry-free contexts).
+    """
 
     name = "afl"
 
-    def __init__(self, temperature: float = 0.5, eps: float = 0.2):
+    def __init__(self, temperature: float = 0.5, eps: float = 0.2,
+                 age_weight: float = 0.5, stale_weight: float = 0.25):
         self.temperature = temperature
         self.eps = eps
+        self.age_weight = age_weight
+        self.stale_weight = stale_weight
+
+    def _valuation(self, ctx: RoundContext, avail: np.ndarray) -> np.ndarray:
+        val = ctx.last_loss[avail] / max(ctx.last_loss[avail].std(), 1e-9)
+        if self.age_weight and ctx.loss_age is not None:
+            val = val + self.age_weight * np.sqrt(
+                np.maximum(ctx.loss_age[avail], 0.0) / (1.0 + ctx.round))
+        if self.stale_weight and ctx.telemetry is not None:
+            val = val - self.stale_weight * ctx.telemetry.staleness_ewma[avail]
+        return val
 
     def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
         avail = ctx.available_ids()
-        val = ctx.last_loss[avail] / max(ctx.last_loss[avail].std(), 1e-9)
+        val = self._valuation(ctx, avail)
         p = np.exp((val - val.max()) / self.temperature)
         p = (1 - self.eps) * p / p.sum() + self.eps / len(avail)
         p /= p.sum()

@@ -3,6 +3,7 @@ from repro.fl.tasks import MLPTask, LMTask, ClientTask
 from repro.fl.client import local_train, probing_epoch, make_parallel_local_train
 from repro.fl.aggregation import (
     buffered_aggregate,
+    compose_staleness,
     fedavg,
     staleness_weight,
     weighted_delta_aggregate,
@@ -26,11 +27,21 @@ from repro.fl.engine import (
 )
 from repro.fl.registry import available_policies, build_policy, register_policy
 from repro.fl.scenarios import (
+    RegionSpec,
     ScenarioSpec,
     available_scenarios,
     build_scenario,
     get_scenario,
     register_scenario,
+)
+from repro.fl.topology import (
+    AggregationTopology,
+    HierarchicalAsyncEngine,
+    TierSpec,
+    available_topologies,
+    get_topology,
+    register_topology,
+    run_topology_round,
 )
 from repro.fl.traces import (
     ResampledFleet,
@@ -47,15 +58,17 @@ from repro.fl.traces import (
 
 __all__ = [
     "DevicePool", "DeviceProfile", "RoundSystemState",
-    "ScenarioSpec", "build_scenario", "register_scenario", "get_scenario",
-    "available_scenarios",
+    "ScenarioSpec", "RegionSpec", "build_scenario", "register_scenario",
+    "get_scenario", "available_scenarios",
+    "AggregationTopology", "TierSpec", "register_topology", "get_topology",
+    "available_topologies", "run_topology_round", "HierarchicalAsyncEngine",
     "Trace", "ResampledFleet", "TraceSpec", "TraceLoad", "TraceAvailability",
     "SyntheticTraceSpec", "synthesize_trace",
     "read_trace_csv", "write_trace_csv", "sample_trace_path",
     "MLPTask", "LMTask", "ClientTask",
     "local_train", "probing_epoch", "make_parallel_local_train",
     "fedavg", "weighted_delta_aggregate",
-    "staleness_weight", "buffered_aggregate",
+    "staleness_weight", "buffered_aggregate", "compose_staleness",
     "FLServer", "FLConfig", "RoundResult",
     "DeviceTelemetry", "TELEMETRY_FEATURES",
     "AsyncRoundEngine", "AsyncJob",

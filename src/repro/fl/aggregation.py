@@ -55,6 +55,31 @@ def staleness_weight(lag, kind: str = "constant", a: float = 0.5,
                      f"expected one of {STALENESS_KINDS}")
 
 
+def compose_staleness(lags_by_tier: Sequence, kind: str = "constant",
+                      a: float = 0.5, b: int = 4) -> np.ndarray:
+    """Effective staleness weight of an update that crossed several
+    aggregation tiers: the product of each tier's :func:`staleness_weight`.
+
+    In a hierarchical topology (:mod:`repro.fl.topology`) an update is
+    first merged at its region edge with a *region* lag (versions behind
+    the edge at dispatch), and the region delta is later merged at the root
+    with a *root* lag (global versions behind at the region merge).  Each
+    merge applies ``s(lag)`` independently, so the client's effective
+    coefficient carries ``s(region_lag) * s(root_lag)`` — exactly what this
+    returns given ``[region_lags, root_lags]`` (arrays broadcast).  With a
+    single tier it reduces to :func:`staleness_weight`; at lag 0 every
+    factor is exactly 1, which is what makes the flat single-region
+    topology bit-for-bit identical to the plain engines.
+    """
+    out = None
+    for lags in lags_by_tier:
+        s = staleness_weight(np.asarray(lags), kind=kind, a=a, b=b)
+        out = s if out is None else out * s
+    if out is None:
+        raise ValueError("compose_staleness needs at least one tier of lags")
+    return out
+
+
 def buffered_aggregate(global_params: Params,
                        client_params: Sequence[Params],
                        data_weights: Sequence[float],

@@ -163,6 +163,16 @@ class AsyncRoundEngine:
         return (sum(1 for j in self.jobs.values() if j.params is not None)
                 + len(self.buffer))
 
+    def _idle_online(self) -> np.ndarray:
+        """Devices that may start new work: online and not already busy
+        with an in-flight job or an unmerged buffered update."""
+        idle_online = self._mask.copy()
+        if self.jobs:
+            idle_online[list(self.jobs)] = False
+        if self.buffer:
+            idle_online[[j.cid for j in self.buffer]] = False
+        return idle_online
+
     def _dispatch(self) -> bool:
         """Run one selection wave if slots and online+idle devices exist."""
         srv, cfg = self.srv, self.srv.cfg
@@ -170,17 +180,21 @@ class AsyncRoundEngine:
         free = self.concurrency - self._slots_used()
         if free <= 0:
             return False
-        idle_online = self._mask.copy()
-        if self.jobs:
-            idle_online[list(self.jobs)] = False
-        if self.buffer:
-            idle_online[[j.cid for j in self.buffer]] = False
+        idle_online = self._idle_online()
         n_idle = int(idle_online.sum())
         if n_idle == 0:
             return False
 
         k = min(free, n_idle, cfg.k_select)
         ctx = srv._ctx(k=k, available=idle_online, round_idx=self.cycle)
+        return self._run_wave(ctx)
+
+    def _run_wave(self, ctx) -> bool:
+        """Probe / select / execute / enqueue one dispatch wave against
+        ``ctx`` (``ctx.available`` already restricted to the devices this
+        wave may draw from — the hierarchical engine passes one region's
+        slice).  Returns whether any work was scheduled."""
+        srv, cfg = self.srv, self.srv.cfg
         plan = build_round_plan(self.policy, ctx, cfg.l_ep)
         probe_ids = np.asarray(plan.probe_ids, dtype=np.int64)
         probe_states = None
@@ -336,6 +350,11 @@ class AsyncRoundEngine:
     # ------------------------------------------------------------------
     # aggregation
     # ------------------------------------------------------------------
+    def _ready(self) -> bool:
+        """Whether a merge can fire now (the hierarchical engine overrides
+        this to fold full region buffers and gate on the ROOT buffer)."""
+        return len(self.buffer) >= self.buffer_size
+
     def _aggregate(self):
         from repro.fl.server import RoundResult, paper_reward
 
@@ -396,7 +415,7 @@ class AsyncRoundEngine:
         for _ in range(max_events):
             # 1. drain full buffers (a merge may free the model for the
             #    next wave, so this must precede dispatch)
-            while len(self.buffer) >= self.buffer_size and done < aggregations:
+            while done < aggregations and self._ready():
                 res = self._aggregate()
                 done += 1
                 if verbose:

@@ -15,7 +15,11 @@ Registered names (see :func:`available_policies`):
   ``FLConfig.prox_mu > 0`` for FedProx)
 * ``fedprox`` — same selection, conventional name for prox runs
 * ``afl``, ``tifl``, ``oort``, ``favor``, ``fedmarl`` — the paper's
-  heuristic/learning baselines
+  heuristic/learning baselines; ``afl`` samples from the analytical
+  loss-age + staleness-history valuation (softmax over normalized loss
+  plus a loss-age exploration bonus minus a telemetry staleness-EWMA
+  penalty — the second analytical comparison next to ``oort-telemetry``,
+  reducing to classic AFL when telemetry is empty)
 * ``oort-telemetry`` — Oort with its utility discounted by the
   :class:`repro.fl.telemetry.DeviceTelemetry` history (EWMA online
   fraction, observed dropout rate, observed completion-time slowdown);

@@ -231,6 +231,121 @@ class DiurnalAvailability:
         return None
 
 
+@dataclass(frozen=True)
+class RegionOutage:
+    """Correlated regional outages layered over any per-device model.
+
+    Wraps an ``inner`` availability model and overlays region-wide offline
+    windows: each round, every currently-up region goes dark with
+    probability ``outage_prob`` for ``outage_len`` rounds (a backbone cut,
+    a regional power failure — the whole region's devices vanish at once,
+    which no per-device churn model can express).  Region extents are bound
+    at :meth:`ScenarioSpec.build` time via :meth:`bind_regions` (device
+    labels are contiguous blocks in region order).
+
+    The inner model's state machine keeps stepping through an outage, so
+    when the region comes back its devices resume exactly where their
+    individual dynamics left off.
+    """
+
+    inner: Any = field(default_factory=AlwaysAvailable)
+    outage_prob: float = 0.05
+    outage_len: int = 3
+    region_sizes: Tuple[int, ...] = ()     # bound by ScenarioSpec.build
+
+    def bind_regions(self, sizes) -> "RegionOutage":
+        return dataclasses.replace(self, region_sizes=tuple(int(s)
+                                                            for s in sizes))
+
+    def _sizes(self, n: int) -> Tuple[int, ...]:
+        # unbound (no regions declared): the whole fleet is one region
+        return self.region_sizes if self.region_sizes else (n,)
+
+    def init_state(self, n: int, rng: np.random.Generator):
+        inner_state = self.inner.init_state(n, rng)
+        remaining = np.zeros(len(self._sizes(n)), dtype=np.int64)
+        return (inner_state, remaining, n)
+
+    def step(self, state, rng: np.random.Generator, round_idx: int):
+        inner_state, remaining, n = state
+        inner_state = self.inner.step(inner_state, rng, round_idx)
+        remaining = np.maximum(remaining - 1, 0)
+        start = rng.random(len(remaining)) < self.outage_prob
+        remaining = np.where((remaining == 0) & start,
+                             self.outage_len, remaining)
+        return (inner_state, remaining, n)
+
+    def mask(self, state, round_idx: int) -> np.ndarray:
+        inner_state, remaining, n = state
+        m = np.asarray(self.inner.mask(inner_state, round_idx),
+                       dtype=bool).copy()
+        m[np.repeat(remaining > 0, self._sizes(n))] = False
+        return m
+
+    def next_transition(self, state, round_idx: int) -> Optional[int]:
+        # outage starts are Bernoulli per round: the mask may change every
+        # step regardless of the inner model's own transition schedule
+        return round_idx + 1
+
+
+@dataclass(frozen=True)
+class RegionalLoad:
+    """Composite load model: each region runs its own sub-model over its
+    contiguous device slice (states initialized and stepped sequentially in
+    region order from the pool's single RNG — deterministic)."""
+
+    models: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+
+    def init_state(self, n: int, rng: np.random.Generator):
+        if n != sum(self.sizes):
+            raise ValueError(f"regional sizes {self.sizes} sum to "
+                             f"{sum(self.sizes)}, fleet has {n}")
+        return tuple(m.init_state(s, rng)
+                     for m, s in zip(self.models, self.sizes))
+
+    def step(self, state, rng: np.random.Generator, round_idx: int):
+        return tuple(m.step(st, rng, round_idx)
+                     for m, st in zip(self.models, state))
+
+    def loads(self, state, round_idx: int) -> np.ndarray:
+        return np.concatenate([m.loads(st, round_idx)
+                               for m, st in zip(self.models, state)])
+
+
+@dataclass(frozen=True)
+class RegionalAvailability:
+    """Composite availability model: per-region sub-models over contiguous
+    slices; ``next_transition`` is the earliest of the regions'."""
+
+    models: Tuple[Any, ...]
+    sizes: Tuple[int, ...]
+
+    def init_state(self, n: int, rng: np.random.Generator):
+        if n != sum(self.sizes):
+            raise ValueError(f"regional sizes {self.sizes} sum to "
+                             f"{sum(self.sizes)}, fleet has {n}")
+        return tuple(m.init_state(s, rng)
+                     for m, s in zip(self.models, self.sizes))
+
+    def step(self, state, rng: np.random.Generator, round_idx: int):
+        return tuple(m.step(st, rng, round_idx)
+                     for m, st in zip(self.models, state))
+
+    def mask(self, state, round_idx: int) -> np.ndarray:
+        return np.concatenate([np.asarray(m.mask(st, round_idx), dtype=bool)
+                               for m, st in zip(self.models, state)])
+
+    def next_transition(self, state, round_idx: int) -> Optional[int]:
+        nxt = None
+        for m, st in zip(self.models, state):
+            fn = getattr(m, "next_transition", None)
+            t = fn(st, round_idx) if fn is not None else round_idx + 1
+            if t is not None:
+                nxt = t if nxt is None else min(nxt, t)
+        return nxt
+
+
 # ---------------------------------------------------------------------------
 # Failure model (applies to *selected* devices mid-round)
 # ---------------------------------------------------------------------------
@@ -298,10 +413,51 @@ class FailureModel:
 
 
 @dataclass(frozen=True)
+class RegionSpec:
+    """One leaf region of a hierarchical fleet (``ScenarioSpec.regions``).
+
+    ``weight`` apportions the fleet (largest-remainder split, every region
+    gets at least one device); any of ``tier_probs`` / ``load`` /
+    ``availability`` / ``trace`` overrides the spec-level default for this
+    region's slice; ``budget`` is an optional per-region selection budget
+    ``k_r`` consumed by :mod:`repro.fl.topology` (defaults there to an even
+    split of ``FLConfig.k_select``)."""
+
+    name: str
+    weight: float = 1.0
+    tier_probs: Optional[Tuple[float, ...]] = None
+    load: Any = None
+    availability: Any = None
+    trace: Optional[TraceSpec] = None
+    budget: Optional[int] = None
+
+
+def split_by_weight(n: int, weights) -> List[int]:
+    """Largest-remainder apportionment of ``n`` devices over regions
+    (deterministic; every region gets at least 1 device)."""
+    w = np.asarray(weights, dtype=np.float64)
+    if len(w) > n:
+        raise ValueError(f"{len(w)} regions need at least {len(w)} devices, "
+                         f"got {n}")
+    quota = w / w.sum() * (n - len(w))      # reserve 1 per region up front
+    counts = np.floor(quota).astype(np.int64) + 1
+    rem = n - int(counts.sum())
+    # hand remainders to the largest fractional parts (ties: region order)
+    order = np.argsort(-(quota - np.floor(quota)), kind="stable")
+    counts[order[:rem]] += 1
+    return [int(c) for c in counts]
+
+
+@dataclass(frozen=True)
 class ScenarioSpec:
     """A fleet environment: tier mix x load dynamics x availability x
     failures.  Build the runtime fleet with :meth:`build` (or the
-    module-level :func:`build_scenario`)."""
+    module-level :func:`build_scenario`).
+
+    ``regions`` adds a hierarchical axis: the fleet is apportioned over
+    named :class:`RegionSpec` leaves (contiguous label blocks), each
+    optionally overriding the tier mix, load, availability or trace for its
+    slice — the substrate :mod:`repro.fl.topology` aggregates over."""
 
     name: str
     description: str = ""
@@ -312,6 +468,7 @@ class ScenarioSpec:
     failures: FailureModel = field(default_factory=FailureModel)
     trace: Optional[TraceSpec] = None     # replaces load+availability with a
     #                                       coherent replayed device trace
+    regions: Optional[Tuple[RegionSpec, ...]] = None
 
     def build(self, n_devices: int, seed: int = 0):
         from repro.fl.simulation import DevicePool
@@ -321,9 +478,56 @@ class ScenarioSpec:
             # one resolve => load and availability replay the SAME
             # bootstrapped fleet (deterministic in (spec, n_devices, seed))
             load, availability = self.trace.resolve(n_devices, seed=seed)
-        return DevicePool(n_devices, seed=seed, tier_probs=list(self.tier_probs),
+        pool_kw = {}
+        tier_probs = list(self.tier_probs)
+        counts = [n_devices]
+        if self.regions:
+            counts = split_by_weight(n_devices, [r.weight for r in self.regions])
+            pool_kw["regions"] = np.repeat(np.arange(len(counts)), counts)
+            pool_kw["region_names"] = [r.name for r in self.regions]
+            if any(r.tier_probs is not None for r in self.regions):
+                tier_probs = [list(r.tier_probs if r.tier_probs is not None
+                                   else self.tier_probs)
+                              for r in self.regions]
+            if any(r.load is not None or r.trace is not None
+                   for r in self.regions):
+                load = RegionalLoad(
+                    tuple(self._region_load(r, i, counts[i], seed)
+                          for i, r in enumerate(self.regions)),
+                    tuple(counts))
+            if any(r.availability is not None or r.trace is not None
+                   for r in self.regions):
+                availability = RegionalAvailability(
+                    tuple(self._region_avail(r, i, counts[i], seed)
+                          for i, r in enumerate(self.regions)),
+                    tuple(counts))
+        if hasattr(availability, "bind_regions"):
+            # region-correlated models (RegionOutage) learn the label
+            # blocks' extents here; an unregioned spec is one region
+            availability = availability.bind_regions(counts)
+        return DevicePool(n_devices, seed=seed, tier_probs=tier_probs,
                           tiers=self.tiers, load_model=load,
-                          availability=availability, failures=self.failures)
+                          availability=availability, failures=self.failures,
+                          **pool_kw)
+
+    def _region_models(self, region: RegionSpec, idx: int, count: int,
+                       seed: int):
+        """(load, availability) for one region slice; a region-level trace
+        replaces both with a coherent replay resolved per region (distinct
+        resample seed per region index)."""
+        if region.trace is not None:
+            return region.trace.resolve(count, seed=seed + 7919 * (idx + 1))
+        return (region.load if region.load is not None else self.load,
+                region.availability if region.availability is not None
+                else self.availability)
+
+    def _region_load(self, region: RegionSpec, idx: int, count: int,
+                     seed: int):
+        return self._region_models(region, idx, count, seed)[0]
+
+    def _region_avail(self, region: RegionSpec, idx: int, count: int,
+                      seed: int):
+        return self._region_models(region, idx, count, seed)[1]
 
 
 _SCENARIOS: Dict[str, ScenarioSpec] = {}
@@ -424,6 +628,43 @@ register_scenario(ScenarioSpec(
                 "files.",
     trace=TraceSpec(synthetic=SyntheticTraceSpec(n_devices=32, days=7,
                                                  seed=11)),
+))
+
+register_scenario(ScenarioSpec(
+    name="hierarchical",
+    description="3-region edge hierarchy: a flagship-heavy metro core with "
+                "mild churn, a balanced suburban ring on nightly charging "
+                "windows, and a low-end rural edge with aggressive churn — "
+                "the per-region tier/availability contrast hierarchical "
+                "selection budgets (repro.fl.topology) are about.",
+    regions=(
+        RegionSpec(name="metro", weight=0.3, tier_probs=(0.5, 0.4, 0.1),
+                   availability=ChurnAvailability(p_drop=0.05, p_join=0.6,
+                                                  init_online=0.95)),
+        RegionSpec(name="suburban", weight=0.4,
+                   availability=DiurnalAvailability(duty=0.5)),
+        RegionSpec(name="rural", weight=0.3, tier_probs=(0.05, 0.25, 0.7),
+                   availability=ChurnAvailability(p_drop=0.3, p_join=0.3,
+                                                  init_online=0.7)),
+    ),
+    failures=FailureModel(dropout=0.05),
+))
+
+register_scenario(ScenarioSpec(
+    name="regional-outage",
+    description="Correlated regional failures: three equal regions of "
+                "churning devices, each going entirely dark for a few "
+                "rounds at a time (RegionOutage over ChurnAvailability) — "
+                "a backbone cut no per-device churn model can express.",
+    regions=(
+        RegionSpec(name="east", weight=1.0),
+        RegionSpec(name="central", weight=1.0),
+        RegionSpec(name="west", weight=1.0),
+    ),
+    availability=RegionOutage(
+        inner=ChurnAvailability(p_drop=0.1, p_join=0.5, init_online=0.9),
+        outage_prob=0.08, outage_len=3),
+    failures=FailureModel(dropout=0.05),
 ))
 
 register_scenario(ScenarioSpec(

@@ -121,6 +121,21 @@ class FLConfig:
     staleness_b: int = 4          # hinge: lag tolerated before decay
     async_tick_s: float = 0.0     # seconds of virtual clock per scenario
     #                               round (0 => median static round latency)
+    topology: Any = None          # hierarchical aggregation topology
+    #                               (repro.fl.topology): a registered name,
+    #                               an AggregationTopology, or None — None
+    #                               auto-builds one when the scenario
+    #                               declares regions, else runs flat
+    regions: int = 0              # convenience: split an unregioned fleet
+    #                               into this many equal contiguous regions
+    region_budgets: Any = None    # per-region selection budgets k_r: dict
+    #                               name->k or sequence in region order
+    #                               (None => even split of k_select)
+    region_exec: str = "stacked"  # hierarchical round execution: "stacked"
+    #                               batches every region's cohort into ONE
+    #                               executor call (the mesh-sharded path),
+    #                               "sequential" runs one call per region —
+    #                               numerically identical
     seed: int = 0
 
 
@@ -145,6 +160,12 @@ class RoundContext:
     #                                  feed it — repro.fl.telemetry)
     feature_set: Any = None          # FeatureSet shaping probe_states
     #                                  (None => "paper6", the paper state)
+    region: np.ndarray = None        # (N,) static region labels (flat fleet:
+    #                                  all zeros — repro.fl.topology)
+    region_id: Optional[int] = None  # set when this context is one region's
+    #                                  slice of a hierarchical round: the
+    #                                  region whose devices are available
+    region_name: Optional[str] = None
     rng: np.random.Generator = field(repr=False, default=None)
 
     def available_ids(self) -> np.ndarray:
@@ -215,6 +236,14 @@ class RoundResult:
     mean_staleness: float = 0.0   # mean model-version lag of merged updates
     max_staleness: int = 0        # worst lag in the merged buffer
     n_pending: int = 0            # jobs still in flight at aggregation time
+    # --- hierarchical-topology fields (repro.fl.topology; empty on flat
+    #     runs so flat construction and digests are unchanged) ---
+    tier_staleness: Dict[str, float] = field(default_factory=dict)
+    #                             mean per-tier lag of the merged updates,
+    #                             keyed "region:<name>" / "root" — the lags
+    #                             whose staleness weights COMPOSE into each
+    #                             update's effective coefficient (see
+    #                             repro.fl.aggregation.compose_staleness)
 
 
 def paper_reward(d_acc: float, r_t: float, r_e: float, t_budget: float,
@@ -256,12 +285,32 @@ class FLServer:
             self.pool.failures = dataclasses.replace(
                 self.pool.failures,
                 dropout=max(self.pool.failures.dropout, cfg.failure_rate))
+        if cfg.regions and cfg.regions > 1:
+            if self.pool.n_regions > 1 and self.pool.n_regions != cfg.regions:
+                raise ValueError(
+                    f"FLConfig.regions={cfg.regions} conflicts with the "
+                    f"scenario's {self.pool.n_regions} declared regions")
+            if self.pool.n_regions == 1:
+                # convenience: carve an unregioned fleet into equal
+                # contiguous regions
+                from repro.fl.scenarios import split_by_weight
+
+                counts = split_by_weight(cfg.n_devices, [1.0] * cfg.regions)
+                self.pool.region = np.repeat(np.arange(cfg.regions), counts)
+                self.pool.n_regions = cfg.regions
+                self.pool.region_names = [f"region{i}"
+                                          for i in range(cfg.regions)]
         self.rng = np.random.default_rng(cfg.seed + 17)
         from repro.core.features import get_feature_set   # deferred: repro.core
         #                                                   imports repro.fl
 
         self.feature_set = get_feature_set(cfg.feature_set)  # validates early
         self.telemetry = DeviceTelemetry(cfg.n_devices)
+        self.telemetry.set_regions(self.pool.region, self.pool.region_names)
+        from repro.fl.topology import resolve_topology   # deferred: topology
+        #                                                  imports server types
+
+        self.topology = resolve_topology(cfg, self.pool)
         key = jax.random.PRNGKey(cfg.seed)
         self.global_params: Params = task.init(key)
         self.data_sizes = np.array([data.client_size(i) for i in range(cfg.n_devices)])
@@ -328,7 +377,7 @@ class FLServer:
                        else available),
             selection_count=self.selection_count.copy(),
             telemetry=self.telemetry, feature_set=self.feature_set,
-            rng=self.rng)
+            region=self.pool.region, rng=self.rng)
 
     def _client_data(self, i: int):
         idx = self.data.client_indices[i]
@@ -350,6 +399,10 @@ class FLServer:
 
     # ------------------------------------------------------------------
     def run_round(self, policy: SelectionPolicy) -> RoundResult:
+        if self.topology is not None:
+            from repro.fl.topology import run_topology_round
+
+            return run_topology_round(self, policy)
         cfg = self.cfg
         self.pool.advance_round()
         ctx = self._ctx()
@@ -478,7 +531,12 @@ class FLServer:
         clock — overlapping client work is not summed."""
         from repro.fl.async_engine import AsyncRoundEngine
 
-        engine = AsyncRoundEngine(self, policy)
+        if self.topology is not None:
+            from repro.fl.topology import HierarchicalAsyncEngine
+
+            engine = HierarchicalAsyncEngine(self, policy)
+        else:
+            engine = AsyncRoundEngine(self, policy)
         engine.run(aggregations or self.cfg.rounds, verbose=verbose)
         return self.history
 

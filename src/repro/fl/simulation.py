@@ -86,7 +86,9 @@ class DevicePool:
     def __init__(self, n_devices: int, seed: int = 0,
                  tier_probs: Optional[List[float]] = None, *,
                  tiers: Optional[Sequence[Sequence[float]]] = None,
-                 load_model=None, availability=None, failures=None):
+                 load_model=None, availability=None, failures=None,
+                 regions: Optional[np.ndarray] = None,
+                 region_names: Optional[Sequence[str]] = None):
         from repro.fl.scenarios import (          # deferred: scenarios imports us
             AlwaysAvailable,
             FailureModel,
@@ -95,6 +97,23 @@ class DevicePool:
 
         self.n = n_devices
         self.rng = np.random.default_rng(seed)
+        # static region labels (hierarchical topologies — repro.fl.topology);
+        # a flat fleet is one region, label 0
+        if regions is None:
+            self.region = np.zeros(n_devices, dtype=np.int64)
+        else:
+            self.region = np.asarray(regions, dtype=np.int64)
+            if len(self.region) != n_devices:
+                raise ValueError(
+                    f"regions has {len(self.region)} labels for "
+                    f"{n_devices} devices")
+        self.n_regions = int(self.region.max()) + 1 if n_devices else 1
+        self.region_names = (list(region_names) if region_names is not None
+                             else [f"region{i}" for i in range(self.n_regions)])
+        if len(self.region_names) != self.n_regions:
+            raise ValueError(
+                f"{len(self.region_names)} region names for "
+                f"{self.n_regions} region labels")
         tier_probs = np.asarray(tier_probs if tier_probs is not None
                                 else [0.25, 0.5, 0.25], dtype=np.float64)
         tier_table = np.asarray(tiers if tiers is not None else _TIERS,
@@ -102,8 +121,21 @@ class DevicePool:
         # vectorized fleet sampling: one inverse-CDF draw for tiers, one
         # (4, N) lognormal block for the per-device jitters
         u = self.rng.random(n_devices)
-        cdf = np.cumsum(tier_probs) / tier_probs.sum()
-        self.tier = np.minimum(np.searchsorted(cdf, u), len(tier_table) - 1)
+        if tier_probs.ndim == 2:
+            # per-region tier mixes: row r is region r's mix.  Same single
+            # uniform draw; the inverse CDF is gathered per device from its
+            # region's row
+            if len(tier_probs) != self.n_regions:
+                raise ValueError(
+                    f"tier_probs has {len(tier_probs)} rows for "
+                    f"{self.n_regions} regions")
+            cdf = np.cumsum(tier_probs, axis=1) / tier_probs.sum(
+                axis=1, keepdims=True)
+            self.tier = np.minimum((u[:, None] > cdf[self.region]).sum(axis=1),
+                                   len(tier_table) - 1)
+        else:
+            cdf = np.cumsum(tier_probs) / tier_probs.sum()
+            self.tier = np.minimum(np.searchsorted(cdf, u), len(tier_table) - 1)
         base = tier_table[self.tier]                        # (N, 4)
         # exp(sigma * z) == lognormal(0, sigma) but ~1.5x faster to draw
         jit = np.exp(0.25 * self.rng.standard_normal((4, n_devices)))
@@ -174,6 +206,10 @@ class DevicePool:
             mask = mask.copy()
             mask[int(self.rng.integers(self.n))] = True
         return mask
+
+    def region_ids(self, region: int) -> np.ndarray:
+        """Device ids carrying the given region label."""
+        return np.flatnonzero(self.region == region)
 
     def draw_failures(self, rng: np.random.Generator, selected: np.ndarray,
                       completion_s: np.ndarray):

@@ -37,6 +37,10 @@ CASES = [
     ("high-churn", "async", "fedrank"),
     ("trace-synthetic-week", "sync", "fedavg"),
     ("trace-synthetic-week", "async", "fedavg"),
+    # hierarchical topology: 3 regions, per-region budgets, per-tier
+    # staleness (repro.fl.topology) — pins both hierarchical drivers
+    ("hierarchical", "sync", "fedavg"),
+    ("hierarchical", "async", "fedavg"),
 ]
 
 
@@ -59,6 +63,11 @@ def _run_case(scenario, mode, policy_name, mlp_task, fl_data):
         "failed": sorted(int(i) for i in r.failed),
         "n_available": r.n_available,
         "mean_staleness": round(r.mean_staleness, 4),
+        # hierarchical runs only: per-tier lag means.  Omitted (not empty)
+        # on flat runs so the eight pre-topology digests stay byte-identical
+        **({"tier_staleness": {k: round(v, 4)
+                               for k, v in sorted(r.tier_staleness.items())}}
+           if r.tier_staleness else {}),
     } for r in hist]
 
 

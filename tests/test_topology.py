@@ -1,0 +1,390 @@
+"""Hierarchical aggregation topology (:mod:`repro.fl.topology`).
+
+The load-bearing guarantees:
+
+* **flat parity** — a forced single-region topology routes a flat run
+  through the hierarchical drivers and must reproduce the plain engines'
+  ``RoundResult`` streams bit-for-bit, sync and async (the degenerate
+  reduction the whole subsystem anchors on);
+* **per-tier staleness composition** — the hierarchical fold's effective
+  per-client coefficient is exactly ``w_norm * s(region_lag) * W_norm *
+  s(root_lag)`` (:func:`compose_staleness`'s product), verified against a
+  hand-computed merge;
+* **region budgets** — no region's cohort ever exceeds its ``k_r``, even
+  under churn; dark regions are skipped without consuming RNG; a policy
+  overshooting its budget fails fast;
+* **determinism** — a hierarchical run is a pure function of (topology,
+  seed).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.fl import FLConfig, FLServer, build_policy
+from repro.fl.aggregation import (
+    buffered_aggregate,
+    compose_staleness,
+    staleness_weight,
+)
+from repro.fl.scenarios import RegionSpec, ScenarioSpec, split_by_weight
+from repro.fl.topology import (
+    AggregationTopology,
+    TierSpec,
+    available_topologies,
+    fold_topology,
+    get_topology,
+    resolve_topology,
+)
+
+
+def _round_fields(r):
+    return (r.round, r.acc, r.test_loss, r.r_t, r.r_e, r.d_acc, r.reward,
+            r.cum_time, r.cum_energy, r.n_available, r.mean_staleness,
+            r.max_staleness, r.n_pending, tuple(int(i) for i in r.selected),
+            tuple(int(i) for i in r.probe_set),
+            tuple(int(i) for i in r.failed),
+            tuple(int(i) for i in r.stragglers))
+
+
+# ---------------------------------------------------------------------------
+# flat parity: single-region topology == plain engines, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy_name", ["fedavg", "fedrank"])
+def test_flat_topology_sync_parity(mlp_task, fl_data, policy_name):
+    kw = dict(n_devices=20, k_select=3, rounds=3, l_ep=2, lr=0.1, seed=7,
+              scenario="high-churn")
+    pol_kw = {"k": 3, "seed": 7} if policy_name == "fedrank" else {}
+    flat = FLServer(FLConfig(**kw), mlp_task, fl_data)
+    assert flat.topology is None
+    h_flat = flat.run(build_policy(policy_name, **pol_kw))
+    topo = FLServer(FLConfig(**kw, topology="flat"), mlp_task, fl_data)
+    assert topo.topology is not None
+    h_topo = topo.run(build_policy(policy_name, **pol_kw))
+    assert len(h_flat) == len(h_topo)
+    for a, b in zip(h_flat, h_topo):
+        assert _round_fields(a) == _round_fields(b)
+    # the global models themselves are identical, not just the metrics
+    for la, lb in zip(jax.tree.leaves(flat.global_params),
+                      jax.tree.leaves(topo.global_params)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+    # the hierarchical result additionally reports the (all-zero) tier lags
+    assert h_topo[-1].tier_staleness["root"] == 0.0
+    assert h_flat[-1].tier_staleness == {}
+
+
+def test_flat_topology_async_parity(mlp_task, fl_data):
+    kw = dict(n_devices=20, k_select=3, rounds=3, l_ep=2, lr=0.1, seed=7,
+              scenario="high-churn", mode="async", async_concurrency=6,
+              staleness="polynomial")
+    flat = FLServer(FLConfig(**kw), mlp_task, fl_data)
+    h_flat = flat.run(build_policy("fedavg"))
+    topo = FLServer(FLConfig(**kw, topology="flat"), mlp_task, fl_data)
+    h_topo = topo.run(build_policy("fedavg"))
+    assert len(h_flat) == len(h_topo)
+    for a, b in zip(h_flat, h_topo):
+        assert _round_fields(a) == _round_fields(b)
+    for la, lb in zip(jax.tree.leaves(flat.global_params),
+                      jax.tree.leaves(topo.global_params)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# staleness composition: region x root weights multiply
+# ---------------------------------------------------------------------------
+
+
+def test_compose_staleness_is_product_of_tiers():
+    region = np.array([0, 1, 3])
+    root = np.array([2, 0, 1])
+    for kind in ("constant", "polynomial", "hinge"):
+        got = compose_staleness([region, root], kind=kind, a=0.5, b=2)
+        want = (staleness_weight(region, kind, 0.5, 2)
+                * staleness_weight(root, kind, 0.5, 2))
+        np.testing.assert_allclose(got, want)
+    # single tier reduces to staleness_weight; lag 0 is exactly 1
+    np.testing.assert_array_equal(
+        compose_staleness([np.zeros(4)], kind="polynomial"), np.ones(4))
+    with pytest.raises(ValueError):
+        compose_staleness([])
+
+
+def test_hierarchical_fold_composes_per_tier_staleness():
+    """Region merge then root merge == the closed-form composition: client i
+    of region r lands with coefficient W_r_norm * s(root_lag_r) * w_i_norm *
+    s(region_lag_i), and the mass lost to staleness stays with the global
+    model at each tier."""
+    rng = np.random.default_rng(0)
+    g = {"w": rng.normal(size=(4,)).astype(np.float32)}
+    kind, a, b = "polynomial", 0.5, 4
+    # two regions, two clients each, distinct region and root lags
+    clients = [{"w": rng.normal(size=(4,)).astype(np.float32)}
+               for _ in range(4)]
+    w = np.array([1.0, 3.0, 2.0, 2.0])
+    region_lags = np.array([0, 2, 1, 3])
+    root_lags = np.array([1, 2])
+
+    # the engine's two-step fold
+    deltas, weights = [], []
+    for r, sl in enumerate([slice(0, 2), slice(2, 4)]):
+        deltas.append(buffered_aggregate(g, clients[sl], list(w[sl]),
+                                         region_lags[sl], kind=kind, a=a, b=b))
+        weights.append(float(w[sl].sum()))
+    merged = buffered_aggregate(g, deltas, weights, root_lags,
+                                kind=kind, a=a, b=b)
+
+    # the closed form via compose_staleness: the global model keeps the
+    # mass staleness removed at EITHER tier (the root's own 1 - sum, plus
+    # each region delta's retained share scaled by its root coefficient),
+    # and client i of region r lands with W_r_norm * w_i_norm *
+    # s(region_lag_i) * s(root_lag_r)
+    W_norm = np.asarray(weights) / sum(weights)
+    s_root = staleness_weight(root_lags, kind, a, b)
+    region_retained = sum(
+        W_norm[r] * s_root[r]
+        * (1.0 - (w[sl] / w[sl].sum()
+                  * staleness_weight(region_lags[sl], kind, a, b)).sum())
+        for r, sl in enumerate([slice(0, 2), slice(2, 4)]))
+    root_retained = 1.0 - (W_norm * s_root).sum()
+    want = g["w"].astype(np.float64) * (root_retained + region_retained)
+    for r, sl in enumerate([slice(0, 2), slice(2, 4)]):
+        w_norm = w[sl] / w[sl].sum()
+        coef = (W_norm[r] * w_norm
+                * compose_staleness(
+                    [region_lags[sl],
+                     np.full(sl.stop - sl.start, root_lags[r])],
+                    kind=kind, a=a, b=b))
+        for ci, p in zip(coef, clients[sl]):
+            want = want + ci * p["w"].astype(np.float64)
+    np.testing.assert_allclose(np.asarray(merged["w"], dtype=np.float64),
+                               want, rtol=1e-5)
+
+
+def test_fold_topology_intermediate_tier_and_flat_identity():
+    rng = np.random.default_rng(1)
+    g = {"w": rng.normal(size=(3,)).astype(np.float32)}
+    d = {"w": rng.normal(size=(3,)).astype(np.float32)}
+    topo = AggregationTopology(leaves=("a",))
+    # single leaf at lag 0: every kind returns the delta exactly
+    for kind in ("constant", "polynomial", "hinge"):
+        out = fold_topology(topo, g, {"a": (d, 5.0)}, kind=kind)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.asarray(d["w"]))
+    # an intermediate tier folds its children before the root sees them
+    tree = AggregationTopology(
+        leaves=("a", "b", "c"),
+        tiers=(TierSpec(name="edge", children=("a", "b")),))
+    assert tree.root_children() == ("c", "edge")
+    assert tree.tier_path("a") == ("edge", "root")
+    assert tree.tier_path("c") == ("root",)
+    da = {"w": np.ones(3, np.float32)}
+    db = {"w": 3.0 * np.ones(3, np.float32)}
+    dc = {"w": 5.0 * np.ones(3, np.float32)}
+    out = fold_topology(tree, g, {"a": (da, 1.0), "b": (db, 1.0),
+                                  "c": (dc, 2.0)}, kind="constant")
+    # edge = mean(1, 3) = 2 with mass 2; root = (2*2 + 5*2) / 4 = 3.5
+    np.testing.assert_allclose(np.asarray(out["w"]), 3.5 * np.ones(3),
+                               rtol=1e-6)
+    # absent leaves are skipped, their tier folds what arrived
+    out = fold_topology(tree, g, {"b": (db, 1.0)}, kind="constant")
+    np.testing.assert_allclose(np.asarray(out["w"]), 3.0 * np.ones(3))
+    assert fold_topology(tree, g, {}) is g
+
+
+# ---------------------------------------------------------------------------
+# budgets and region semantics under churn
+# ---------------------------------------------------------------------------
+
+
+def test_region_budgets_enforced_under_churn(mlp_task, fl_data):
+    cfg = FLConfig(n_devices=20, k_select=6, rounds=6, l_ep=2, lr=0.1,
+                   seed=11, scenario="hierarchical",
+                   region_budgets={"metro": 3, "suburban": 2, "rural": 1})
+    srv = FLServer(cfg, mlp_task, fl_data)
+    budgets = srv.topology.resolve_budgets(cfg.k_select, cfg.region_budgets)
+    np.testing.assert_array_equal(budgets, [3, 2, 1])
+    hist = srv.run(build_policy("fedavg"))
+    for r in hist:
+        counts = np.bincount(srv.pool.region[r.selected], minlength=3)
+        assert (counts <= budgets).all(), (
+            f"round {r.round}: cohort {counts.tolist()} exceeds "
+            f"budgets {budgets.tolist()}")
+        # every selected device was online
+        assert len(r.selected) > 0
+
+
+def test_even_budget_split_and_overrides():
+    topo = AggregationTopology(leaves=("a", "b", "c"))
+    np.testing.assert_array_equal(topo.resolve_budgets(7, None), [3, 2, 2])
+    np.testing.assert_array_equal(topo.resolve_budgets(7, [1, 2, 4]),
+                                  [1, 2, 4])
+    np.testing.assert_array_equal(
+        topo.resolve_budgets(7, {"a": 5, "b": 1, "c": 1}), [5, 1, 1])
+    with pytest.raises(ValueError, match="missing"):
+        topo.resolve_budgets(7, {"a": 5})
+    with pytest.raises(ValueError, match="3 regions"):
+        topo.resolve_budgets(7, [1, 2])
+    pinned = AggregationTopology(leaves=("a", "b"), budgets=(4, 1))
+    np.testing.assert_array_equal(pinned.resolve_budgets(10, None), [4, 1])
+
+
+def test_offline_region_is_skipped_not_fatal(mlp_task, fl_data):
+    """A region with zero online devices contributes nothing this round —
+    the other regions still train (graceful region outage)."""
+    from repro.fl.scenarios import build_scenario
+
+    spec = ScenarioSpec(
+        name="one-dark-region",
+        regions=(RegionSpec(name="live", weight=1.0),
+                 RegionSpec(name="dark", weight=1.0)))
+    pool = spec.build(20, seed=0)
+    # force the dark region offline by wrapping availability post-build
+    dark = pool.region == 1
+    real_available = pool.available
+
+    def masked():
+        m = real_available()
+        m[dark] = False
+        if not m.any():
+            m[0] = True
+        return m
+
+    pool.available = masked
+    cfg = FLConfig(n_devices=20, k_select=4, rounds=2, l_ep=2, lr=0.1,
+                   seed=5)
+    srv = FLServer(cfg, mlp_task, fl_data, pool=pool)
+    assert srv.topology is not None and srv.topology.n_regions == 2
+    hist = srv.run(build_policy("fedavg"))
+    for r in hist:
+        assert len(r.selected) > 0
+        assert (pool.region[r.selected] == 0).all()
+        assert "region:dark" not in r.tier_staleness
+
+
+def test_policy_overshooting_budget_fails_fast(mlp_task, fl_data):
+    class Greedy:
+        name = "greedy"
+        needs_probing = False
+
+        def probe_set(self, ctx):
+            return np.empty(0, dtype=np.int64)
+
+        def select(self, ctx, probe_ids, probe_states):
+            return ctx.available_ids()      # ignores ctx.k entirely
+
+        def observe(self, ctx, result, probe_ids, probe_states):
+            pass
+
+    cfg = FLConfig(n_devices=20, k_select=4, rounds=1, l_ep=2, lr=0.1,
+                   seed=5, scenario="hierarchical")
+    srv = FLServer(cfg, mlp_task, fl_data)
+    with pytest.raises(ValueError, match="exceeding its budget"):
+        srv.run_round(Greedy())
+
+
+# ---------------------------------------------------------------------------
+# determinism and config plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_hierarchical_run_deterministic_in_topology_and_seed(mlp_task,
+                                                             fl_data):
+    def run(mode):
+        kw = dict(n_devices=20, k_select=6, rounds=3, l_ep=2, lr=0.1,
+                  seed=13, scenario="hierarchical")
+        if mode == "async":
+            kw.update(mode="async", async_concurrency=12,
+                      staleness="polynomial")
+        srv = FLServer(FLConfig(**kw), mlp_task, fl_data)
+        return [_round_fields(r) + (tuple(sorted(r.tier_staleness.items())),)
+                for r in srv.run(build_policy("fedavg"))]
+
+    for mode in ("sync", "async"):
+        assert run(mode) == run(mode)
+
+
+def test_stacked_and_sequential_region_exec_identical(mlp_task, fl_data):
+    def run(region_exec):
+        cfg = FLConfig(n_devices=20, k_select=6, rounds=2, l_ep=2, lr=0.1,
+                       seed=13, scenario="hierarchical",
+                       region_exec=region_exec)
+        srv = FLServer(cfg, mlp_task, fl_data)
+        srv.run(build_policy("fedrank", k=6, seed=13))
+        return srv
+
+    a, b = run("stacked"), run("sequential")
+    for ra, rb in zip(a.history, b.history):
+        assert _round_fields(ra) == _round_fields(rb)
+    for la, lb in zip(jax.tree.leaves(a.global_params),
+                      jax.tree.leaves(b.global_params)):
+        assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+def test_regions_config_carves_unregioned_fleet(mlp_task, fl_data):
+    cfg = FLConfig(n_devices=20, k_select=6, rounds=1, l_ep=2, lr=0.1,
+                   seed=3, regions=4)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    assert srv.pool.n_regions == 4
+    assert srv.topology is not None and srv.topology.n_regions == 4
+    np.testing.assert_array_equal(np.bincount(srv.pool.region), [5, 5, 5, 5])
+    r = srv.run_round(build_policy("fedavg"))
+    assert set(r.tier_staleness) <= {"region:region0", "region:region1",
+                                     "region:region2", "region:region3",
+                                     "root"}
+
+
+def test_topology_registry_and_validation():
+    assert set(available_topologies()) >= {"flat", "regions", "edge-hier"}
+    with pytest.raises(KeyError, match="unknown topology"):
+        from repro.fl.scenarios import build_scenario
+
+        get_topology("nope", build_scenario("uniform", 4, seed=0))
+    with pytest.raises(ValueError, match="two parents"):
+        AggregationTopology(
+            leaves=("a", "b"),
+            tiers=(TierSpec("t1", ("a",)), TierSpec("t2", ("a",))))
+    with pytest.raises(ValueError, match="bottom-up"):
+        AggregationTopology(leaves=("a",), tiers=(TierSpec("t", ("x",)),))
+    with pytest.raises(ValueError, match="leaves"):
+        resolve_topology(
+            dataclasses.replace(FLConfig(),
+                                topology=AggregationTopology(leaves=("a",))),
+            _FakePool(n_regions=3))
+
+
+class _FakePool:
+    def __init__(self, n_regions):
+        self.n_regions = n_regions
+        self.region_names = [f"r{i}" for i in range(n_regions)]
+
+
+def test_split_by_weight_properties():
+    for n, w in [(20, [0.3, 0.4, 0.3]), (7, [1, 1, 1]), (5, [10, 1, 1, 1, 1])]:
+        counts = split_by_weight(n, w)
+        assert sum(counts) == n
+        assert all(c >= 1 for c in counts)
+    with pytest.raises(ValueError):
+        split_by_weight(2, [1, 1, 1])
+
+
+def test_async_hierarchy_reports_per_tier_lags(mlp_task, fl_data):
+    cfg = FLConfig(n_devices=20, k_select=6, rounds=4, l_ep=2, lr=0.1,
+                   seed=7, scenario="hierarchical", mode="async",
+                   async_concurrency=12, staleness="polynomial")
+    srv = FLServer(cfg, mlp_task, fl_data)
+    hist = srv.run(build_policy("fedavg"))
+    assert len(hist) == 4
+    for r in hist:
+        assert "root" in r.tier_staleness
+        region_keys = [k for k in r.tier_staleness if k.startswith("region:")]
+        assert region_keys, r.tier_staleness
+        # each merged client's total lag >= its region-tier lag: the root
+        # can only ADD lag on top (composition, never cancellation)
+        assert r.mean_staleness >= max(
+            0.0, min(r.tier_staleness[k] for k in region_keys)) - 1e-9
+    # total = region + root composition holds for the means, delta-weighted:
+    # checked structurally — some merge must eventually carry nonzero lag
+    assert any(r.mean_staleness > 0 for r in hist)

@@ -1,12 +1,31 @@
-"""Kernel micro-bench: name, us_per_call, derived columns.
+"""Kernel micro-bench: CSV to stdout + machine-readable BENCH_kernels.json.
 
 On this CPU container the Pallas kernels run in interpret mode (Python), so
 their wall-time is NOT meaningful — the honest perf signal is the XLA
 reference path timing plus the analytic FLOP/byte roofline columns derived
 per call.  Both are emitted; the TPU projection column uses the v5e specs.
+
+Two stdout tables:
+
+* the per-kernel table (``name,us_per_call,derived_gflops,tpu_roofline_us``)
+  — one row per kernel shape, XLA-reference wall time + roofline;
+* the ``select_topk`` sweep (4k -> 1M candidates) comparing the FUSED
+  roofline (feature stream + O(K) carry, no score vector in HBM) against
+  the score-then-sort ORACLE roofline (score vector write/read plus
+  ~N*8*log2(N) bytes of sort passes) — the fused path wins at every N and
+  the gap widens with the fleet (acceptance: beats the oracle at N >= 100k).
+
+``--quick`` shrinks every shape and additionally runs the select_topk
+Pallas kernel in interpret mode, asserting bit-exact parity against the
+oracle — the CI kernel-smoke gate.  ``--out`` controls the JSON path
+(default ``BENCH_kernels.json``) so the perf trajectory is tracked as a CI
+artifact across PRs.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import math
 import time
 
 import jax
@@ -16,14 +35,21 @@ import numpy as np
 from repro.kernels.flash_attention.ref import attention_ref
 from repro.kernels.pairwise_rank.ref import pairwise_rank_ref
 from repro.kernels.rwkv6.ref import wkv6_ref
+from repro.kernels.select_topk.kernel import select_topk_pallas
+from repro.kernels.select_topk.ref import select_topk_ref
 
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
+PEAK_FLOPS = 197e12   # v5e fp32-via-bf16 MXU peak
+HBM_BW = 819e9        # v5e HBM bandwidth, bytes/s
+
+QNET_HIDDEN = 64      # Q-net head: F -> H -> H -> 1 (repro.core.qnet)
+SELECT_F = 16         # padded feature width for the selection sweep
+SELECT_K = 64         # cohort size (MAX_COHORT)
 
 
 def _time(fn, *args, iters=20):
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    # single warmup call; block_until_ready handles tuples/pytrees, so no
+    # isinstance probe (which used to invoke fn twice)
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)
@@ -31,44 +57,153 @@ def _time(fn, *args, iters=20):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def main() -> None:
-    rng = np.random.default_rng(0)
-    print("name,us_per_call,derived_gflops,tpu_roofline_us")
+def _qnet_flops_per_cand(f: int, h: int = QNET_HIDDEN) -> float:
+    return 2.0 * f * h + 2.0 * h * h + 2.0 * h      # 3 matmul layers
 
-    # pairwise rank: N=4096 cohort
-    n = 4096
+
+def _select_rooflines(n: int, k: int, f: int = SELECT_F) -> dict:
+    """Analytic v5e time for the fused kernel vs the score-then-sort oracle.
+
+    Fused: HBM traffic is the feature stream (+ mask/bias rows) plus an
+    O(K) carry that never leaves VMEM mid-sweep; compute is the MLP head.
+    Oracle: same scoring traffic PLUS the (N,) score vector written to and
+    re-read from HBM and ~log2(N) data passes for the sort/top_k
+    (8 bytes/candidate/pass: value + index lanes).
+    """
+    flops = n * _qnet_flops_per_cand(f)
+    bytes_feats = n * (f + 2) * 4.0                  # feats + mask + bias
+    bytes_fused = bytes_feats + 8.0 * k              # + top-K out
+    bytes_sort = n * 8.0 + n * 8.0 * max(1.0, math.log2(max(n, 2)))
+    bytes_oracle = bytes_feats + bytes_sort
+    t_fused = max(flops / PEAK_FLOPS, bytes_fused / HBM_BW) * 1e6
+    t_oracle = max(flops / PEAK_FLOPS, bytes_oracle / HBM_BW) * 1e6
+    return {
+        "n": n, "k": k, "feature_dim": f,
+        "fused_roofline_us": round(t_fused, 3),
+        "oracle_roofline_us": round(t_oracle, 3),
+        "roofline_speedup": round(t_oracle / t_fused, 3),
+    }
+
+
+def _make_qnet(rng, f: int, h: int = QNET_HIDDEN) -> dict:
+    g = lambda *s: jnp.asarray(rng.normal(size=s) * 0.3, jnp.float32)
+    return {"w1": g(f, h), "b1": g(h), "w2": g(h, h), "b2": g(h),
+            "w3": g(h, 1), "b3": g(1)}
+
+
+def bench_kernels(quick: bool) -> list:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    def emit(name, us, flops):
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived_gflops": round(flops / 1e9, 2),
+                     "tpu_roofline_us": round(flops / PEAK_FLOPS * 1e6, 2)})
+
+    # pairwise rank
+    n = 256 if quick else 4096
     s = jnp.asarray(rng.normal(size=n), jnp.float32)
     t = jnp.asarray(rng.normal(size=n), jnp.float32)
     m = jnp.ones(n, jnp.float32)
-    f = jax.jit(pairwise_rank_ref)
-    us = _time(f, s, t, m)
-    flops = 10.0 * n * n  # ~10 flops per pair (sigmoid+bce)
-    print(f"pairwise_rank_n4096,{us:.1f},{flops/1e9:.2f},"
-          f"{flops/PEAK_FLOPS*1e6:.2f}")
+    us = _time(jax.jit(pairwise_rank_ref), s, t, m, iters=5 if quick else 20)
+    emit(f"pairwise_rank_n{n}", us, 10.0 * n * n)
 
-    # flash attention: B2 S1024 H8 KV2 Dh64 causal
-    b, s_, h, kv, dh = 2, 1024, 8, 2, 64
+    # flash attention (causal)
+    b, s_, h, kv, dh = (1, 128, 4, 2, 64) if quick else (2, 1024, 8, 2, 64)
     q = jnp.asarray(rng.normal(size=(b, s_, h, dh)), jnp.float32)
     k = jnp.asarray(rng.normal(size=(b, s_, kv, dh)), jnp.float32)
     v = jnp.asarray(rng.normal(size=(b, s_, kv, dh)), jnp.float32)
-    f = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
-    us = _time(f, q, k, v)
-    flops = 2 * 2 * b * h * s_ * s_ * dh / 2  # causal half
-    print(f"flash_attention_s1024,{us:.1f},{flops/1e9:.2f},"
-          f"{flops/PEAK_FLOPS*1e6:.2f}")
+    us = _time(jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True)),
+               q, k, v, iters=5 if quick else 20)
+    emit(f"flash_attention_s{s_}", us, 2 * 2 * b * h * s_ * s_ * dh / 2)
 
-    # rwkv6: BH=8 T=512 n=64
-    bh, t_, n_ = 8, 512, 64
+    # rwkv6
+    bh, t_, n_ = (2, 64, 64) if quick else (8, 512, 64)
     r = jnp.asarray(rng.normal(size=(bh, t_, n_)), jnp.float32)
     k2 = jnp.asarray(rng.normal(size=(bh, t_, n_)), jnp.float32)
     v2 = jnp.asarray(rng.normal(size=(bh, t_, n_)), jnp.float32)
     lw = jnp.asarray(-np.exp(rng.normal(-2, 1, size=(bh, t_, n_))), jnp.float32)
     u = jnp.asarray(rng.normal(size=(bh, n_)) * 0.1, jnp.float32)
     s0 = jnp.zeros((bh, n_, n_), jnp.float32)
-    f = jax.jit(wkv6_ref)
-    us = _time(f, r, k2, v2, lw, u, s0)
-    flops = 4.0 * bh * t_ * n_ * n_
-    print(f"rwkv6_t512,{us:.1f},{flops/1e9:.2f},{flops/PEAK_FLOPS*1e6:.2f}")
+    us = _time(jax.jit(wkv6_ref), r, k2, v2, lw, u, s0,
+               iters=5 if quick else 20)
+    emit(f"rwkv6_t{t_}", us, 4.0 * bh * t_ * n_ * n_)
+
+    return rows
+
+
+def bench_select_topk(quick: bool) -> list:
+    rng = np.random.default_rng(1)
+    f = SELECT_F
+    params = _make_qnet(rng, f)
+    sweep = [512, 4096] if quick else [4096, 32768, 100_000, 262_144, 1_000_000]
+    out = []
+    for n in sweep:
+        k = min(SELECT_K, n)
+        feats = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+        mask = jnp.asarray((rng.random(n) > 0.1).astype(np.float32))
+        bias = jnp.zeros(n, jnp.float32)
+        oracle = lambda fe, ma, bi: select_topk_ref(params, fe, ma, bi, k=k)
+        iters = 3 if (quick or n > 65536) else 10
+        us = _time(oracle, feats, mask, bias, iters=iters)
+        row = _select_rooflines(n, k, f)
+        row["oracle_us_measured"] = round(us, 1)
+        out.append(row)
+    return out
+
+
+def smoke_parity() -> None:
+    """--quick CI gate: interpret-mode Pallas kernel, bit-exact vs oracle."""
+    rng = np.random.default_rng(2)
+    f = SELECT_F
+    params = _make_qnet(rng, f)
+    n, k = 777, 64
+    feats = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    mask = jnp.asarray((rng.random(n) > 0.3).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=n), jnp.float32)
+    vr, ir = select_topk_ref(params, feats, mask, bias, k=k)
+    vp, ip = select_topk_pallas(params, feats, mask, bias, k=k,
+                                block=256, interpret=True)
+    assert np.array_equal(np.asarray(ir), np.asarray(ip[:k])), "index parity"
+    assert np.array_equal(np.asarray(vr), np.asarray(vp[:k])), "value parity"
+    print("# select_topk interpret-mode parity: OK (n=777, k=64)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="small shapes + interpret-mode kernel smoke (CI)")
+    ap.add_argument("--out", default="BENCH_kernels.json",
+                    help="machine-readable results path")
+    args = ap.parse_args()
+
+    rows = bench_kernels(args.quick)
+    print("name,us_per_call,derived_gflops,tpu_roofline_us")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},{r['derived_gflops']},"
+              f"{r['tpu_roofline_us']}")
+
+    select_rows = bench_select_topk(args.quick)
+    print("select_topk_n,k,oracle_us_measured,fused_roofline_us,"
+          "oracle_roofline_us,roofline_speedup")
+    for r in select_rows:
+        print(f"{r['n']},{r['k']},{r['oracle_us_measured']},"
+              f"{r['fused_roofline_us']},{r['oracle_roofline_us']},"
+              f"{r['roofline_speedup']}")
+
+    if args.quick:
+        smoke_parity()
+
+    payload = {
+        "meta": {"backend": jax.default_backend(), "quick": bool(args.quick),
+                 "peak_flops": PEAK_FLOPS, "hbm_bw": HBM_BW},
+        "kernels": rows,
+        "select_topk": select_rows,
+    }
+    with open(args.out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+        fh.write("\n")
+    print(f"# wrote {args.out}")
 
 
 if __name__ == "__main__":

@@ -359,6 +359,63 @@ def run_fleet_bench(sizes=(10_000, 100_000), steps: int = 5, repeats: int = 3,
 
 
 # ---------------------------------------------------------------------------
+# Fleet-scale cohort selection: host score+argsort vs the select_topk op
+# ---------------------------------------------------------------------------
+
+
+def run_selection_bench(sizes=(10_000, 100_000), k: int = 64,
+                        repeats: int = 5, verbose: bool = True):
+    """Top-K cohort cut over an N-device fleet: the seed host path (score
+    everything, pull the full ``(N,)`` vector to host, full ``np.argsort``)
+    vs the shared :func:`repro.kernels.select_topk.ops.select_topk` op
+    (fused score+top-K in one jitted call, only K winners leave the
+    device).  Same Q-net, same mask, identical winners (the op's parity is
+    pinned in tests/test_select_topk.py); this times the round-trip + sort.
+    Best of ``repeats``."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.qnet import apply_qnet, init_qnet
+    from repro.kernels.select_topk.ops import select_topk
+
+    params = init_qnet(jax.random.PRNGKey(0))
+    f = int(params["w1"].shape[0])
+    rows = []
+    for n in sizes:
+        rng = np.random.default_rng(0)
+        feats = rng.normal(size=(n, f)).astype(np.float32)
+        mask = (rng.random(n) > 0.1).astype(np.float32)
+
+        def host_path():
+            qs = np.asarray(apply_qnet(params, jnp.asarray(feats)))
+            qs = np.where(mask > 0, qs, -np.inf)
+            return np.argsort(-qs, kind="stable")[:k]
+
+        def op_path():
+            return select_topk(params, feats, mask, k)[0]
+
+        host_s, op_s = float("inf"), float("inf")
+        a, b = host_path(), op_path()            # warmup: jit compile
+        assert np.array_equal(np.asarray(a), np.asarray(b)), "selection parity"
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            host_path()
+            host_s = min(host_s, time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            op_path()
+            op_s = min(op_s, time.perf_counter() - t0)
+        row = {"bench": "selection", "n_devices": n, "k": k,
+               "host_argsort_s": round(host_s, 5),
+               "select_topk_s": round(op_s, 5),
+               "speedup": round(host_s / op_s, 2)}
+        rows.append(row)
+        if verbose:
+            print(json.dumps(row), flush=True)
+    return rows
+
+
+# ---------------------------------------------------------------------------
 # Hierarchical round execution: region-vectorized (stacked) vs sequential
 # ---------------------------------------------------------------------------
 
@@ -441,6 +498,7 @@ def main() -> None:
         out = args.out or "results/fleet_scale.json"
         results = run_fleet_bench()
         results += run_region_exec_bench()
+        results += run_selection_bench()
         os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
         with open(out, "w") as f:
             json.dump(results, f, indent=1)

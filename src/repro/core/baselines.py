@@ -22,6 +22,7 @@ from repro.core import experts
 from repro.core.features import featurize
 from repro.core.qnet import apply_qnet, hard_update, init_qnet
 from repro.fl.server import RoundContext, RoundResult
+from repro.kernels.select_topk.ops import select_topk
 
 
 class _Base:
@@ -113,7 +114,8 @@ class TiFLPolicy(_Base):
         self._last_tier = 0
 
     def _build(self, ctx: RoundContext):
-        order = np.argsort(ctx.est_t_round)
+        # stable sort: latency ties land in the same tier on every platform
+        order = np.argsort(ctx.est_t_round, kind="stable")
         self.tier_of = np.zeros(ctx.n, int)
         for t, chunk in enumerate(np.array_split(order, self.n_tiers)):
             self.tier_of[chunk] = t
@@ -172,7 +174,8 @@ class OortPolicy(_Base):
         k = min(ctx.k, len(avail))
         n_explore = int(round(self.explore_frac * k))
         n_exploit = k - n_explore
-        chosen = list(avail[np.argsort(-util[avail])[:n_exploit]])
+        exploit_idx, _ = select_topk(None, util, ctx.available, n_exploit)
+        chosen = list(exploit_idx)
         rest = np.setdiff1d(avail, chosen)
         n_explore = min(n_explore, len(rest))
         if n_explore > 0:
@@ -246,12 +249,13 @@ class FavorPolicy(_Base):
 
     def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
         feats = featurize(self._bookkeeping_states(ctx))
-        qs = np.asarray(apply_qnet(self.q, jnp.asarray(feats)))
         avail = ctx.available_ids()
         k = min(ctx.k, len(avail))
         if ctx.rng.random() < self.eps:
             return ctx.rng.choice(avail, size=k, replace=False)
-        return avail[np.argsort(-qs[avail])[:k]]
+        # fused Q-net scoring + top-K over the fleet, offline devices masked
+        idx, _ = select_topk(self.q, feats, ctx.available, k)
+        return idx
 
     def observe(self, ctx, result: RoundResult, probe_ids, probe_states) -> None:
         feats = featurize(self._bookkeeping_states(ctx))
@@ -280,9 +284,9 @@ class FedMarlPolicy(_Base):
     needs_probing = True
 
     def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
-        util = experts.fedmarl_utility(probe_states, l_ep=5)
-        order = np.argsort(-util)[:ctx.k]
-        return probe_ids[order]
+        idx, _ = select_topk(lambda s: experts.fedmarl_utility(s, l_ep=5),
+                             probe_states, None, ctx.k)
+        return probe_ids[idx]
 
 
 class ExpertPolicy(_Base):
@@ -297,5 +301,7 @@ class ExpertPolicy(_Base):
         self.l_ep = l_ep
 
     def select(self, ctx: RoundContext, probe_ids, probe_states) -> np.ndarray:
-        util = experts.expert_scores(self.expert_name, probe_states, l_ep=self.l_ep)
-        return probe_ids[np.argsort(-util)[:ctx.k]]
+        idx, _ = select_topk(
+            lambda s: experts.expert_scores(self.expert_name, s, l_ep=self.l_ep),
+            probe_states, None, ctx.k)
+        return probe_ids[idx]

@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.core.qnet import apply_qnet
 from repro.core.ranking import pairwise_bce, pairwise_soft_targets
+from repro.kernels.select_topk.ops import masked_topk
 
 MAX_COHORT = 64
 
@@ -82,9 +83,10 @@ def make_td_train_step(gamma: float, rank_eps: float, k: int, lr: float):
         def per_transition(f, m, a, r, nf, nm):
             qs = apply_qnet(q, f)                      # (M,)
             pred = jnp.sum(qs * a)                     # VDN over selected
-            # double-Q bootstrap: online net picks top-k, target net evaluates
-            nq_online = apply_qnet(q, nf) - 1e9 * (1 - nm)
-            _, top = jax.lax.top_k(nq_online, k)
+            # double-Q bootstrap: online net picks top-k, target net
+            # evaluates — same masking + lowest-index tie rule as the
+            # selection kernel (masked entries sunk to the shared sentinel)
+            _, top = masked_topk(apply_qnet(q, nf), nm, k)
             nq_target = apply_qnet(q_target, nf)
             boot = jnp.sum(nq_target[top])
             target = r + gamma * boot

@@ -23,8 +23,9 @@ from repro.core.dqn import (
     pad_cohort,
 )
 from repro.core.features import get_feature_set
-from repro.core.qnet import apply_qnet, hard_update, init_qnet
+from repro.core.qnet import hard_update, init_qnet
 from repro.fl.server import RoundContext, RoundResult
+from repro.kernels.select_topk.ops import select_topk
 
 
 class FedRankPolicy:
@@ -96,11 +97,15 @@ class FedRankPolicy:
                 max(ctx.k, int(round(ctx.k * self.probe_factor))))
         book = self.fs.bookkeeping_states(ctx)
         feats = self.fs.featurize(book)
-        qs = np.asarray(apply_qnet(self.q, jnp.asarray(feats)))
-        # over-participation decay mirrors the experts' fairness behavior
-        qs = qs - 0.05 * np.sqrt(ctx.selection_count)
         n_explore = max(1, m // 5)
-        top = list(avail[np.argsort(-qs[avail])[: m - n_explore]])
+        # fused score -> top-K over the whole fleet: the Q-net head runs
+        # inside the selection kernel, offline devices are masked, and the
+        # over-participation decay (mirroring the experts' fairness
+        # behavior) streams in as the additive bias term
+        top_idx, _ = select_topk(
+            self.q, feats, ctx.available, m - n_explore,
+            bias=-0.05 * np.sqrt(ctx.selection_count))
+        top = list(top_idx)
         # exploration probes avoid known stragglers: probing cost is
         # T_prob = max over the cohort, so one slow explorer taxes the whole
         # round — sample explorers from the faster half of the online pool
@@ -122,8 +127,9 @@ class FedRankPolicy:
                 f"(width {self.fs.state_dim}), got width "
                 f"{probe_states.shape[1]} — set FLConfig.feature_set to match")
         feats = self.fs.featurize(probe_states)
-        qs = np.asarray(apply_qnet(self.q, jnp.asarray(feats)))
-        order = np.argsort(-qs)
+        # full ordering of the probe cohort (epsilon-greedy swaps pull from
+        # the tail, so k = cohort size), fused score+rank in one op
+        order, _ = select_topk(self.q, feats, None, len(feats))
         chosen = list(order[:ctx.k])
         # epsilon-greedy: swap a random tail element in occasionally
         if ctx.rng.random() < self.explore_eps and len(order) > ctx.k:

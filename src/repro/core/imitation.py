@@ -22,6 +22,7 @@ from repro.core.baselines import ExpertPolicy
 from repro.core.features import get_feature_set
 from repro.core.qnet import apply_qnet, init_qnet
 from repro.core.ranking import pairwise_bce_hard, ranking_accuracy, topk_overlap
+from repro.kernels.select_topk.ops import select_topk
 
 
 @dataclass
@@ -44,7 +45,8 @@ class _RecordingExpert(ExpertPolicy):
                                          l_ep=self.l_ep)
         self.store.append(Demonstration(probe_states.copy(), util.copy(),
                                         self.expert_name))
-        return probe_ids[np.argsort(-util)[:ctx.k]]
+        idx, _ = select_topk(None, util, None, ctx.k)
+        return probe_ids[idx]
 
 
 def collect_demonstrations(

@@ -12,4 +12,7 @@ validated in interpret mode on CPU (tests/test_kernels.py):
                      VMEM-resident (n, n) state
     mamba            selective scan with VMEM-resident (inner, state) state
                      (EXPERIMENTS.md §Perf pair A it4)
+    select_topk      fused Q-net scoring -> running top-K cohort selection
+                     (ops.select_topk is THE selection path for every
+                     ranking policy; tests/test_select_topk.py)
 """

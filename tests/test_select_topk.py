@@ -1,0 +1,230 @@
+"""select_topk: fused Pallas kernel vs XLA oracle parity, the shared-op
+contract (masking, tie-breaking, k > n_valid), and the kernel-vs-host
+FedRank golden (3 rounds, bit-for-bit identical cohorts)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.select_topk.kernel import select_topk_pallas
+from repro.kernels.select_topk.ops import (
+    masked_topk,
+    resolve_select_impl,
+    select_topk,
+    topk_indices,
+)
+from repro.kernels.select_topk.ref import NEG_INF, qnet_scores_ref, select_topk_ref
+
+
+def _qnet(rng, f, h=64, zero=False):
+    if zero:
+        z = lambda *s: jnp.zeros(s, jnp.float32)
+        return {"w1": z(f, h), "b1": z(h), "w2": z(h, h), "b2": z(h),
+                "w3": z(h, 1), "b3": z(1)}
+    g = lambda *s: jnp.asarray(rng.normal(size=s) * 0.3, jnp.float32)
+    return {"w1": g(f, h), "b1": g(h), "w2": g(h, h), "b2": g(h),
+            "w3": g(h, 1), "b3": g(1)}
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,f,k", [
+    (1, 6, 1),            # single candidate
+    (5, 6, 3),            # smaller than one tile
+    (127, 6, 10),         # not a tile multiple
+    (512, 14, 64),        # exact tile multiple
+    (513, 14, 64),        # tile multiple + 1
+    (1000, 6, 17),        # several tiles, odd k
+])
+def test_kernel_matches_oracle(n, f, k):
+    rng = np.random.default_rng(n * 7 + k)
+    params = _qnet(rng, f)
+    feats = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    mask = jnp.asarray((rng.random(n) > 0.3).astype(np.float32))
+    bias = jnp.asarray(rng.normal(size=n), jnp.float32)
+    vr, ir = select_topk_ref(params, feats, mask, bias, k=k)
+    vp, ip = select_topk_pallas(params, feats, mask, bias, k=k,
+                                block=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ir), np.asarray(ip[:k]))
+    np.testing.assert_array_equal(np.asarray(vr), np.asarray(vp[:k]))
+
+
+def test_kernel_all_masked_matches_oracle():
+    rng = np.random.default_rng(0)
+    params = _qnet(rng, 6)
+    feats = jnp.asarray(rng.normal(size=(40, 6)), jnp.float32)
+    mask = jnp.zeros(40)
+    vr, ir = select_topk_ref(params, feats, mask, jnp.zeros(40), k=5)
+    vp, ip = select_topk_pallas(params, feats, mask, jnp.zeros(40), k=5,
+                                block=16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ir), np.asarray(ip[:5]))
+    assert np.all(np.asarray(vr) == NEG_INF)
+
+
+def test_kernel_tie_breaking_lowest_index():
+    """All-equal scores (zeroed net) must select ascending indices — the
+    contract's deterministic lowest-index tie rule."""
+    rng = np.random.default_rng(1)
+    params = _qnet(rng, 6, zero=True)
+    feats = jnp.asarray(rng.normal(size=(300, 6)), jnp.float32)
+    _, ip = select_topk_pallas(params, feats, jnp.ones(300), jnp.zeros(300),
+                               k=20, block=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ip[:20]), np.arange(20))
+
+
+def test_kernel_quantized_ties_match_oracle():
+    """Heavily quantized scores produce many cross-tile ties; the kernel's
+    merge must break them exactly like the stable oracle."""
+    rng = np.random.default_rng(2)
+    f = 6
+    params = _qnet(rng, f, zero=True)
+    n = 500
+    feats = jnp.asarray(rng.normal(size=(n, f)), jnp.float32)
+    bias = jnp.asarray(rng.integers(0, 4, size=n).astype(np.float32))
+    mask = jnp.asarray((rng.random(n) > 0.2).astype(np.float32))
+    vr, ir = select_topk_ref(params, feats, mask, bias, k=32)
+    vp, ip = select_topk_pallas(params, feats, mask, bias, k=32,
+                                block=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ir), np.asarray(ip[:32]))
+    np.testing.assert_array_equal(np.asarray(vr), np.asarray(vp[:32]))
+
+
+def test_oracle_scores_match_core_qnet():
+    from repro.core.qnet import apply_qnet, init_qnet
+
+    q = init_qnet(jax.random.PRNGKey(3))
+    f = int(q["w1"].shape[0])
+    feats = jnp.asarray(np.random.default_rng(3).normal(size=(17, f)),
+                        jnp.float32)
+    np.testing.assert_allclose(np.asarray(qnet_scores_ref(q, feats)),
+                               np.asarray(apply_qnet(q, feats)), atol=0)
+
+
+# ---------------------------------------------------------------------------
+# the shared op contract
+# ---------------------------------------------------------------------------
+
+
+def test_op_masked_candidates_excluded():
+    rng = np.random.default_rng(4)
+    params = _qnet(rng, 6)
+    states = rng.normal(size=(50, 6))
+    mask = np.ones(50)
+    mask[::2] = 0.0                               # mask the evens
+    idx, _ = select_topk(params, states, mask, 10)
+    assert len(idx) == 10
+    assert np.all(idx % 2 == 1)
+    # callable path obeys the same mask
+    idx2, _ = select_topk(lambda s: s[:, 0], states, mask, 10)
+    assert np.all(idx2 % 2 == 1)
+
+
+def test_op_k_exceeds_n_valid():
+    rng = np.random.default_rng(5)
+    params = _qnet(rng, 6)
+    states = rng.normal(size=(10, 6))
+    mask = np.zeros(10)
+    mask[[2, 7, 9]] = 1.0
+    idx, vals = select_topk(params, states, mask, 8)
+    assert sorted(idx.tolist()) == [2, 7, 9]      # exactly the valid ones
+    assert len(vals) == 3
+    idx, vals = select_topk(params, states, np.zeros(10), 8)
+    assert len(idx) == 0 and len(vals) == 0       # all masked -> empty
+
+
+def test_op_scores_descending_and_reported():
+    rng = np.random.default_rng(6)
+    s = rng.normal(size=200)
+    idx, vals = select_topk(None, s, None, 30)
+    assert np.all(np.diff(vals) <= 0)
+    np.testing.assert_allclose(vals, s[idx])
+
+
+def test_op_impl_dispatch_parity():
+    """Explicit pallas vs xla impl give identical winners and scores."""
+    rng = np.random.default_rng(7)
+    params = _qnet(rng, 8)
+    states = rng.normal(size=(333, 8))
+    mask = (rng.random(333) > 0.25).astype(float)
+    bias = rng.normal(size=333)
+    ix, vx = select_topk(params, states, mask, 40, bias=bias, impl="xla")
+    ip, vp = select_topk(params, states, mask, 40, bias=bias, impl="pallas")
+    np.testing.assert_array_equal(ix, ip)
+    np.testing.assert_array_equal(vx, vp)
+
+
+def test_resolve_impl_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_SELECT_IMPL", "pallas")
+    assert resolve_select_impl("auto") == "pallas"
+    assert resolve_select_impl("xla") == "xla"    # explicit always wins
+    monkeypatch.delenv("REPRO_SELECT_IMPL")
+    assert resolve_select_impl("auto") in ("pallas", "xla")
+    with pytest.raises(ValueError):
+        resolve_select_impl("cuda")
+
+
+# ---------------------------------------------------------------------------
+# host partial-select + jit-traceable masked_topk
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 10, 64, 999, 1000])
+def test_topk_indices_equals_stable_argsort(k):
+    rng = np.random.default_rng(8)
+    s = np.round(rng.normal(size=1000), 1)        # quantized: many ties
+    np.testing.assert_array_equal(topk_indices(s, k),
+                                  np.argsort(-s, kind="stable")[:k])
+
+
+def test_topk_indices_masked():
+    rng = np.random.default_rng(9)
+    s = rng.normal(size=100)
+    mask = rng.random(100) > 0.5
+    got = topk_indices(s, 20, mask)
+    want = np.argsort(-np.where(mask, s, -np.inf), kind="stable")[:20]
+    np.testing.assert_array_equal(got, want)
+    assert np.all(mask[got])
+
+
+def test_masked_topk_ties_and_mask():
+    s = jnp.asarray([1.0, 3.0, 3.0, 2.0, 3.0, 0.0])
+    m = jnp.asarray([1.0, 1.0, 0.0, 1.0, 1.0, 1.0])
+    vals, idx = masked_topk(s, m, 3)
+    np.testing.assert_array_equal(np.asarray(idx), [1, 4, 3])  # 2 is masked
+    np.testing.assert_array_equal(np.asarray(vals), [3.0, 3.0, 2.0])
+
+
+# ---------------------------------------------------------------------------
+# FedRank 3-round golden: kernel path vs host/XLA path, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def _run_fedrank(mlp_task, fl_data, rounds=3):
+    from repro.core import FedRankPolicy
+    from repro.fl import FLConfig, FLServer
+
+    cfg = FLConfig(n_devices=20, k_select=4, rounds=rounds, l_ep=2,
+                   lr=0.1, seed=7)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    pol = FedRankPolicy(None, k=4, seed=0, train_batch=4)
+    return srv.run(pol)
+
+
+def test_fedrank_kernel_vs_host_selection_identical(monkeypatch, mlp_task,
+                                                    fl_data):
+    """The selection kernel is a drop-in for the host path: the same
+    3-round FedRank run selects bit-for-bit identical probe sets and
+    cohorts whether selection goes through the XLA oracle or the
+    interpret-mode Pallas kernel."""
+    monkeypatch.setenv("REPRO_SELECT_IMPL", "xla")
+    hist_x = _run_fedrank(mlp_task, fl_data)
+    monkeypatch.setenv("REPRO_SELECT_IMPL", "pallas")
+    hist_p = _run_fedrank(mlp_task, fl_data)
+    assert len(hist_x) == len(hist_p) == 3
+    for rx, rp in zip(hist_x, hist_p):
+        np.testing.assert_array_equal(rx.probe_set, rp.probe_set)
+        np.testing.assert_array_equal(rx.selected, rp.selected)
+        assert rx.acc == rp.acc

@@ -18,12 +18,16 @@ def build_env(n_devices: int = 40, k: int = 5, rounds: int = 25, l_ep: int = 3,
               executor: str = "sequential", scenario: str = "uniform",
               mode: str = "sync", async_concurrency: int = 0,
               staleness: str = "constant", buffer_size: int = 0,
-              feature_set: str = "paper6"):
+              feature_set: str = "paper6", aggregator: str = "mean",
+              agg_trim: int = 1, agg_f: int = 1, agg_m: int = 0):
     """Returns (make_server, task, data). sigma=None -> IID.  ``scenario``
     names the fleet environment (see repro.fl.scenarios); ``mode="async"``
     selects the buffered asynchronous engine (repro.fl.async_engine) with
     the given concurrency/staleness knobs; ``feature_set`` shapes
-    ``RoundContext.probe_states`` (repro.core.features)."""
+    ``RoundContext.probe_states`` (repro.core.features); ``aggregator``
+    picks the (robust) merge with its trim/f/m_select knobs
+    (repro.fl.aggregation) — the adversarial-scenario sweeps pair it with
+    the attack scenarios of repro.fl.attacks."""
     train, test = make_classification_data(n_samples=n_samples, seed=seed)
     if sigma is None:
         parts = iid_partition(len(train.y), n_devices, seed=seed, size_skew=0.8)
@@ -39,7 +43,8 @@ def build_env(n_devices: int = 40, k: int = 5, rounds: int = 25, l_ep: int = 3,
                        scenario=scenario, mode=mode,
                        async_concurrency=async_concurrency,
                        staleness=staleness, buffer_size=buffer_size,
-                       feature_set=feature_set)
+                       feature_set=feature_set, aggregator=aggregator,
+                       agg_trim=agg_trim, agg_f=agg_f, agg_m=agg_m)
         return FLServer(cfg, task, data)
 
     return make_server, task, data

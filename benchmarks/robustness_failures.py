@@ -20,7 +20,18 @@ enough to catch a rotted driver, not enough to draw conclusions.  Async
 quick rows cover ``uniform`` and ``high-churn`` only, unless scenarios are
 named explicitly (the CI trace-smoke passes ``--scenarios trace-livelab
 trace-synthetic-week`` to exercise the replayed-trace path under both
-regimes — see :mod:`repro.fl.traces`).
+regimes — see :mod:`repro.fl.traces`; the attack-smoke passes
+``--scenarios byzantine-signflip label-drift``).
+
+Adversarial scenarios (``byzantine-signflip`` / ``byzantine-scaled`` /
+``label-drift``, see :mod:`repro.fl.attacks`) additionally sweep the
+robust-aggregation axis (``ATTACK_AGGREGATORS``), answering where ranking
+selection helps or hurts under attack; refresh just those rows at the
+acceptance budget without re-running the benign sweep via
+
+    PYTHONPATH=src python -m benchmarks.robustness_failures \\
+        --scenarios byzantine-signflip byzantine-scaled label-drift \\
+        --rounds 20 --merge
 """
 from __future__ import annotations
 
@@ -30,7 +41,7 @@ import os
 from typing import Dict, List, Optional, Sequence
 
 from benchmarks.common import build_env, emit_csv
-from repro.fl import available_scenarios, build_policy
+from repro.fl import available_scenarios, build_policy, get_scenario
 
 QUICK_SCENARIOS = ("uniform", "high-churn", "stragglers")
 QUICK_ASYNC_SCENARIOS = ("uniform", "high-churn")
@@ -44,6 +55,19 @@ MODES = ("sync", "async")
 # async engine knobs used throughout the sweep: stream the buffer full from
 # 3x concurrency, damp stale updates polynomially
 ASYNC_KW = dict(mode="async", staleness="polynomial")
+# adversarial scenarios (repro.fl.attacks) additionally sweep the
+# robust-aggregation axis: the plain mean (what the attack breaks), the
+# coordinate-wise trimmed mean and multi-Krum (distance-filtered mean, the
+# budgeted Krum variant).  Knobs are sized for the default k=5 cohorts of
+# a 30%-adversarial fleet: trim=2 trims both coordinate tails past the
+# expected adversary count, m_select=3 keeps the majority-honest core
+# after Krum scoring (Krum's f is clamped engine-side to (m-3)//2)
+ATTACK_AGGREGATORS = ("mean", "trimmed_mean", "multi_krum")
+AGG_KW = {
+    "mean": {},
+    "trimmed_mean": dict(agg_trim=2),
+    "multi_krum": dict(agg_f=2, agg_m=3),
+}
 
 
 def _pretrained_qnet(make_server, quick: bool):
@@ -77,6 +101,11 @@ def run(scenarios: Optional[Sequence[str]] = None,
 
     rows = []
     for scenario in scenarios:
+        # adversarial scenarios fan out over the robust-aggregation axis;
+        # benign ones stay on the plain mean — it IS fedavg there
+        attack = getattr(get_scenario(scenario), "attack", None)
+        attack_fraction = float(attack.fraction) if attack is not None else 0.0
+        aggregators = ATTACK_AGGREGATORS if attack is not None else ("mean",)
         for mode in modes:
             if (quick and not explicit_scenarios and mode == "async"
                     and scenario not in QUICK_ASYNC_SCENARIOS):
@@ -87,49 +116,61 @@ def run(scenarios: Optional[Sequence[str]] = None,
             # cheaper than barrier rounds, and the ToA reduction needs the
             # async trajectory to cross the sync target
             n_steps = rounds if mode == "sync" or quick else 2 * rounds
-            make_server, _, _ = build_env(n_devices=n_devices, k=k,
-                                          rounds=n_steps, sigma=0.1,
-                                          seed=seed, scenario=scenario,
-                                          **env_kw)
-            for name in policies:
-                kw = {"qnet": q, "k": k, "seed": seed} if name == "fedrank" else {}
-                srv = make_server(5)
-                hist = srv.run(build_policy(name, **kw))
-                trajectory = [{
-                    "round": r.round,
-                    "acc": round(r.acc, 4),
-                    "r_t": round(r.r_t, 2),
-                    "r_e": round(r.r_e, 2),
-                    "cum_time_s": round(r.cum_time, 1),
-                    "cum_energy_j": round(r.cum_energy, 1),
-                    "n_selected": len(r.selected),
-                    "n_failed": len(r.failed),
-                    "n_stragglers": len(r.stragglers),
-                    "n_available": r.n_available,
-                    "mean_staleness": round(r.mean_staleness, 2),
-                    "n_pending": r.n_pending,
-                    # hierarchical runs: per-tier lag means ("region:<name>"
-                    # / "root"); empty dict on flat runs
-                    "tier_staleness": {t: round(v, 2) for t, v
-                                       in sorted(r.tier_staleness.items())},
-                } for r in hist]
-                rows.append({
-                    "scenario": scenario,
-                    "mode": mode,
-                    "policy": name,
-                    "final_acc": round(hist[-1].acc, 4),
-                    "cum_time_s": round(hist[-1].cum_time, 1),
-                    "cum_energy_j": round(hist[-1].cum_energy, 1),
-                    "total_failed": sum(len(r.failed) for r in hist),
-                    "total_stragglers": sum(len(r.stragglers) for r in hist),
-                    "mean_available": round(sum(r.n_available for r in hist)
-                                            / len(hist), 1),
-                    "trajectory": trajectory,
-                })
-                if verbose:
-                    summary = {h: rows[-1][h] for h in rows[-1]
-                               if h != "trajectory"}
-                    print(summary, flush=True)
+            for aggregator in aggregators:
+                make_server, _, _ = build_env(n_devices=n_devices, k=k,
+                                              rounds=n_steps, sigma=0.1,
+                                              seed=seed, scenario=scenario,
+                                              aggregator=aggregator,
+                                              **AGG_KW[aggregator], **env_kw)
+                for name in policies:
+                    kw = {"qnet": q, "k": k, "seed": seed} \
+                        if name == "fedrank" else {}
+                    srv = make_server(5)
+                    hist = srv.run(build_policy(name, **kw))
+                    trajectory = [{
+                        "round": r.round,
+                        "acc": round(r.acc, 4),
+                        "r_t": round(r.r_t, 2),
+                        "r_e": round(r.r_e, 2),
+                        "cum_time_s": round(r.cum_time, 1),
+                        "cum_energy_j": round(r.cum_energy, 1),
+                        "n_selected": len(r.selected),
+                        "n_failed": len(r.failed),
+                        "n_stragglers": len(r.stragglers),
+                        "n_available": r.n_available,
+                        "mean_staleness": round(r.mean_staleness, 2),
+                        "n_pending": r.n_pending,
+                        # adversarial runs: how many merged updates were
+                        # corrupted this round/aggregation
+                        "n_adversaries": len(r.adversaries),
+                        # hierarchical runs: per-tier lag means
+                        # ("region:<name>" / "root"); empty dict on flat runs
+                        "tier_staleness": {t: round(v, 2) for t, v
+                                           in sorted(r.tier_staleness.items())},
+                    } for r in hist]
+                    rows.append({
+                        "scenario": scenario,
+                        "mode": mode,
+                        "policy": name,
+                        "aggregator": aggregator,
+                        "attack_fraction": attack_fraction,
+                        "final_acc": round(hist[-1].acc, 4),
+                        "cum_time_s": round(hist[-1].cum_time, 1),
+                        "cum_energy_j": round(hist[-1].cum_energy, 1),
+                        "total_failed": sum(len(r.failed) for r in hist),
+                        "total_stragglers": sum(len(r.stragglers)
+                                                for r in hist),
+                        "total_adversaries": sum(len(r.adversaries)
+                                                 for r in hist),
+                        "mean_available": round(sum(r.n_available
+                                                    for r in hist)
+                                                / len(hist), 1),
+                        "trajectory": trajectory,
+                    })
+                    if verbose:
+                        summary = {h: rows[-1][h] for h in rows[-1]
+                                   if h != "trajectory"}
+                        print(summary, flush=True)
     return rows
 
 
@@ -143,18 +184,33 @@ def main() -> None:
                     help="round regimes to sweep (default: both)")
     ap.add_argument("--rounds", type=int, default=25)
     ap.add_argument("--out", default="BENCH_scenarios.json")
+    ap.add_argument("--merge", action="store_true",
+                    help="update --out in place: replace rows matching the "
+                         "new (scenario, mode, policy, aggregator) keys, "
+                         "keep the rest — so an adversarial-only sweep "
+                         "doesn't discard the benign rows")
     args = ap.parse_args()
 
     rows = run(scenarios=args.scenarios, modes=args.modes,
                rounds=args.rounds, quick=args.quick)
+    if args.merge and os.path.exists(args.out):
+        with open(args.out) as f:
+            old = json.load(f)
+        fresh = {(r["scenario"], r["mode"], r["policy"],
+                  r.get("aggregator", "mean")) for r in rows}
+        kept = [r for r in old.get("results", [])
+                if (r["scenario"], r["mode"], r["policy"],
+                    r.get("aggregator", "mean")) not in fresh]
+        rows = kept + rows
     out_dir = os.path.dirname(os.path.abspath(args.out))
     os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
         json.dump({"quick": args.quick, "results": rows}, f, indent=1)
     print(f"wrote {args.out} ({len(rows)} runs)")
-    emit_csv(rows, ["scenario", "mode", "policy", "final_acc", "cum_time_s",
+    emit_csv(rows, ["scenario", "mode", "policy", "aggregator",
+                    "attack_fraction", "final_acc", "cum_time_s",
                     "cum_energy_j", "total_failed", "total_stragglers",
-                    "mean_available"])
+                    "total_adversaries", "mean_available"])
 
 
 if __name__ == "__main__":

@@ -31,9 +31,10 @@ from typing import Dict, List, Optional
 
 from benchmarks.common import emit_csv
 
-HEADER = ["scenario", "mode", "policy", "target_acc", "final_acc", "toa_s",
-          "eoa_J", "round_at_target", "speedup_vs_fedavg", "energy_vs_fedavg",
-          "mean_region_lag", "mean_root_lag"]
+HEADER = ["scenario", "mode", "policy", "aggregator", "attack_frac",
+          "target_acc", "final_acc", "toa_s", "eoa_J", "round_at_target",
+          "speedup_vs_fedavg", "energy_vs_fedavg", "mean_region_lag",
+          "mean_root_lag"]
 
 
 def _tier_lag_means(trajectory: List[Dict]):
@@ -67,29 +68,37 @@ def reduce_rows(results: List[Dict], target_frac: float = 0.95,
     ``scenarios`` optionally restricts which ones are reduced."""
     if scenarios is not None:
         results = [r for r in results if r["scenario"] in scenarios]
-    by_key = {(r["scenario"], r.get("mode", "sync"), r["policy"]): r
+    # adversarial rows fan out over the robust-aggregation axis; benign
+    # rows (and pre-attack sweep files) carry the implicit plain mean
+    by_key = {(r["scenario"], r.get("mode", "sync"), r["policy"],
+               r.get("aggregator", "mean")): r
               for r in results}
     scenarios = sorted({r["scenario"] for r in results})
     out = []
     for scenario in scenarios:
-        base = (by_key.get((scenario, "sync", "fedavg"))
+        base = (by_key.get((scenario, "sync", "fedavg", "mean"))
                 or next((r for r in results if r["scenario"] == scenario
                          and r["policy"] == "fedavg"), None))
         if base is None:
             continue
         target = round(target_frac * base["final_acc"], 4)
-        modes = sorted({m for (s, m, _p) in by_key if s == scenario})
+        modes = sorted({m for (s, m, _p, _a) in by_key if s == scenario})
         for mode in modes:
-            fed = by_key.get((scenario, mode, "fedavg"))
+            # ToA/EoA ratios are against the UNDEFENDED same-mode fedavg —
+            # under attack that is exactly the "how much does the defense
+            # buy" comparison
+            fed = by_key.get((scenario, mode, "fedavg", "mean"))
             t_fed, e_fed, _ = (_first_crossing(fed["trajectory"], target)
                                if fed else (None, None, None))
-            for (s, m, policy), row in sorted(by_key.items()):
+            for (s, m, policy, agg), row in sorted(by_key.items()):
                 if s != scenario or m != mode:
                     continue
                 toa, eoa, rnd = _first_crossing(row["trajectory"], target)
                 region_lag, root_lag = _tier_lag_means(row["trajectory"])
                 out.append({
                     "scenario": scenario, "mode": mode, "policy": policy,
+                    "aggregator": agg,
+                    "attack_frac": row.get("attack_fraction", 0.0),
                     "target_acc": target,
                     "final_acc": row["final_acc"],
                     "toa_s": toa if toa is not None else "n/a",

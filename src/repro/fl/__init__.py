@@ -2,11 +2,24 @@ from repro.fl.simulation import DevicePool, DeviceProfile, RoundSystemState
 from repro.fl.tasks import MLPTask, LMTask, ClientTask
 from repro.fl.client import local_train, probing_epoch, make_parallel_local_train
 from repro.fl.aggregation import (
+    AGGREGATORS,
     buffered_aggregate,
     compose_staleness,
+    coordinate_median,
     fedavg,
+    krum,
+    multi_krum,
+    robust_aggregate,
     staleness_weight,
+    trimmed_mean,
     weighted_delta_aggregate,
+)
+from repro.fl.attacks import (
+    AttackModel,
+    GaussianNoise,
+    LabelSkewDrift,
+    ScaledUpdate,
+    SignFlip,
 )
 from repro.fl.server import FLServer, FLConfig, RoundResult
 from repro.fl.telemetry import TELEMETRY_FEATURES, DeviceTelemetry
@@ -69,6 +82,10 @@ __all__ = [
     "local_train", "probing_epoch", "make_parallel_local_train",
     "fedavg", "weighted_delta_aggregate",
     "staleness_weight", "buffered_aggregate", "compose_staleness",
+    "AGGREGATORS", "robust_aggregate", "trimmed_mean", "coordinate_median",
+    "krum", "multi_krum",
+    "AttackModel", "SignFlip", "ScaledUpdate", "GaussianNoise",
+    "LabelSkewDrift",
     "FLServer", "FLConfig", "RoundResult",
     "DeviceTelemetry", "TELEMETRY_FEATURES",
     "AsyncRoundEngine", "AsyncJob",

@@ -73,6 +73,8 @@ class AsyncJob:
     loss: float               # final local-epoch loss (revealed on upload)
     fail_at_s: float          # active seconds until mid-job dropout (inf)
     elapsed_s: float = 0.0    # active seconds done so far
+    adversarial: bool = False  # upload corrupted by the scenario's attack
+    #                            model (repro.fl.attacks) at dispatch
 
     @property
     def end_s(self) -> float:
@@ -257,6 +259,20 @@ class AsyncRoundEngine:
                           params=None, loss=float(srv.last_loss[i]),
                           fail_at=np.inf)
 
+        # attack injection: adversarial uploads are corrupted at dispatch,
+        # relative to the version the wave trained from (self.cycle is the
+        # wave counter — the async analogue of the sync round index).  Drawn
+        # from the dedicated attack RNG stream, so attack=None waves consume
+        # exactly the engine RNG of pre-attack builds
+        adv = np.zeros(len(selected), bool)
+        if srv.attack is not None and len(selected):
+            adv = srv.attack.draw(cfg.n_devices, cfg.seed, self.cycle,
+                                  selected)
+            for i in selected[adv]:
+                params[int(i)] = srv.attack.corrupt(
+                    params[int(i)], srv.global_params, cid=int(i),
+                    seed=cfg.seed, round_idx=self.cycle)
+
         # mid-job dropout (the scenario failure model's Bernoulli channel;
         # the deadline channel has no meaning without a round barrier)
         p_drop = srv.pool.failures.dropout
@@ -273,7 +289,8 @@ class AsyncRoundEngine:
             loss_arr = losses.get(i, np.zeros(0))
             loss = float(loss_arr[-1]) if len(loss_arr) else float(srv.last_loss[i])
             self._add_job(i, duration=dur, energy=en, params=params[i],
-                          loss=loss, fail_at=fail_at)
+                          loss=loss, fail_at=fail_at,
+                          adversarial=bool(adv[j]))
         srv.telemetry.observe_selection(selected)   # = srv.selection_count
         self._last_observe = (ctx, probe_ids if plan.has_probe else None,
                               probe_states)
@@ -283,12 +300,13 @@ class AsyncRoundEngine:
         return len(selected) > 0 or len(probe_ids) > 0
 
     def _add_job(self, cid: int, *, duration: float, energy: float, params,
-                 loss: float, fail_at: float) -> None:
+                 loss: float, fail_at: float,
+                 adversarial: bool = False) -> None:
         self.jobs[cid] = AsyncJob(cid=cid, version=self.version,
                                   seq=self._seq, cycle=self.cycle,
                                   duration_s=max(duration, _EPS),
                                   energy_j=energy, params=params, loss=loss,
-                                  fail_at_s=fail_at)
+                                  fail_at_s=fail_at, adversarial=adversarial)
         self._seq += 1
 
     # ------------------------------------------------------------------
@@ -368,7 +386,9 @@ class AsyncRoundEngine:
             np.array([j.cid for j in take], dtype=np.int64), lags)
         srv.global_params = buffered_aggregate(
             srv.global_params, [j.params for j in take], weights, lags,
-            kind=cfg.staleness, a=cfg.staleness_a, b=cfg.staleness_b)
+            kind=cfg.staleness, a=cfg.staleness_a, b=cfg.staleness_b,
+            robust=cfg.aggregator, trim=cfg.agg_trim, f=cfg.agg_f,
+            m_select=cfg.agg_m or None)
         self.version += 1
 
         acc, test_loss = srv._evaluate()
@@ -386,6 +406,8 @@ class AsyncRoundEngine:
             r_t=r_t, r_e=r_e, d_acc=d_acc, reward=reward,
             cum_time=srv._cum_time, cum_energy=srv._cum_energy,
             failed=np.asarray(sorted(self._failed_since_agg), dtype=np.int64),
+            adversaries=np.asarray(sorted(j.cid for j in take
+                                          if j.adversarial), dtype=np.int64),
             n_available=int(self._mask.sum()),
             mean_staleness=float(lags.mean()), max_staleness=int(lags.max()),
             n_pending=len(self.jobs))

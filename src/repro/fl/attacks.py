@@ -1,0 +1,204 @@
+"""Adversarial client attacks: corrupt updates between training and merge.
+
+Benign scenarios (:mod:`repro.fl.scenarios`) stress selection with churn,
+stragglers and outages; this module adds *hostile* clients — the regime the
+non-IID selection literature (arXiv:2310.08147 grey-relational selection,
+arXiv:2111.11204 gradient-importance selection) identifies as the first
+thing that breaks ranking-based selection.  An :class:`AttackModel` rides on
+a scenario exactly like its :class:`~repro.fl.scenarios.FailureModel`: it is
+drawn per round against the selected cohort, so it composes with any tier
+mix / load / availability / trace axis unchanged.
+
+The corruption contract, shared by both round regimes:
+
+* **membership** — :meth:`AttackModel.adversary_mask` marks a *static*
+  ``round(fraction * n)``-device subset of the fleet (Byzantine clients are
+  compromised devices, not per-round coin flips), vectorized over the
+  struct-of-arrays pool and deterministic in ``(n, seed)``;
+* **per-round draw** — :meth:`AttackModel.draw` restricts that mask to the
+  round's selected ids, keyed by ``(seed, round)`` through a dedicated RNG
+  stream (:func:`attack_rng`) that NEVER touches the engines' main
+  generators: a 0%-adversary attacked run consumes exactly the same RNG as
+  an unattacked run and is therefore bit-for-bit identical to it;
+* **corruption** — :meth:`AttackModel.corrupt` maps an uploaded parameter
+  pytree to its poisoned version *after local training and before (buffered)
+  aggregation*, relative to the dispatch-time global model, deterministic in
+  ``(seed, round, cid)``.  Telemetry recording observes selections,
+  completions and staleness — never parameter values — so recording stays
+  unperturbed under any attack.
+
+Concrete attacks: :class:`SignFlip` (boosted update reversal),
+:class:`ScaledUpdate` (model-replacement boosting), :class:`GaussianNoise`
+(additive parameter noise) and :class:`LabelSkewDrift` (per-round rotation
+of the classifier-head update over the label axis — simulated label-
+distribution drift on the round clock).  Defenses live in
+:mod:`repro.fl.aggregation` (``trimmed_mean`` / ``coordinate_median`` /
+``krum`` / ``multi_krum``, selected via ``FLConfig.aggregator``); the
+adversarial scenarios (``byzantine-signflip``, ``byzantine-scaled``,
+``label-drift``) pair the two in :mod:`repro.fl.scenarios`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+# salt for the dedicated attack RNG stream: keyed (salt, seed, round[, cid])
+# so attack draws are deterministic in (seed, round) and statistically
+# independent of every engine RNG (pool dynamics, failure draws, policies)
+_ATTACK_SALT = 0xAD7E
+
+
+def attack_rng(seed: int, round_idx: int, cid: int = -1
+               ) -> np.random.Generator:
+    """The attack stream: deterministic in ``(seed, round_idx[, cid])`` and
+    disjoint from the engines' generators by construction.  ``round_idx=-1``
+    keys the round-independent membership draw, ``cid=-1`` the per-round
+    (not per-client) draw; SeedSequence entropy must be non-negative, so
+    both sentinels are shifted by one."""
+    return np.random.default_rng([_ATTACK_SALT, abs(int(seed)),
+                                  int(round_idx) + 1, int(cid) + 1])
+
+
+@dataclass(frozen=True)
+class AttackModel:
+    """Base attack: a static adversarial subset + an update corruption.
+
+    ``fraction`` of the fleet (rounded to a device count) is adversarial;
+    membership is drawn once per ``(n, seed)`` — the same devices stay
+    hostile for the whole run, which is what makes per-device telemetry
+    and ranking history meaningful under attack.  Subclasses implement
+    :meth:`corrupt`; :class:`AttackModel` itself corrupts nothing (the
+    ``fraction=0`` identity used by the bit-parity tests).
+    """
+
+    fraction: float = 0.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.fraction <= 1.0:
+            raise ValueError(f"attack fraction must be in [0, 1], "
+                             f"got {self.fraction}")
+
+    # ------------------------------------------------------------------
+    def n_adversaries(self, n: int) -> int:
+        return int(round(self.fraction * n))
+
+    def adversary_mask(self, n: int, seed: int) -> np.ndarray:
+        """(n,) bool: the static compromised subset, vectorized and
+        deterministic in ``(n, seed)`` (round-independent)."""
+        mask = np.zeros(n, dtype=bool)
+        k = self.n_adversaries(n)
+        if k:
+            mask[attack_rng(seed, -1).permutation(n)[:k]] = True
+        return mask
+
+    def draw(self, n: int, seed: int, round_idx: int,
+             ids: np.ndarray) -> np.ndarray:
+        """(len(ids),) bool: which of the round's selected ``ids`` are
+        adversarial.  The base draw is the static mask gathered at ``ids``;
+        ``round_idx`` keys subclasses that modulate activity over time."""
+        ids = np.asarray(ids, dtype=np.int64)
+        return self.adversary_mask(n, seed)[ids]
+
+    # ------------------------------------------------------------------
+    def corrupt(self, params: Params, global_params: Params, *, cid: int,
+                seed: int, round_idx: int) -> Params:
+        """Poisoned upload for one adversarial client.  ``params`` is the
+        honestly-trained result, ``global_params`` the dispatch-time global
+        model (async corruption is relative to the version the job started
+        from).  Must be deterministic in ``(seed, round_idx, cid)``."""
+        return params
+
+
+def _map_delta(params: Params, global_params: Params, fn) -> Params:
+    """p -> g + fn(p - g) per leaf, in float32, preserving leaf dtypes."""
+    def one(p, g):
+        g32 = g.astype(jnp.float32)
+        return (g32 + fn(p.astype(jnp.float32) - g32)).astype(p.dtype)
+    return jax.tree.map(one, params, global_params)
+
+
+@dataclass(frozen=True)
+class SignFlip(AttackModel):
+    """Boosted update reversal: upload ``g - scale * (p - g)``.
+
+    ``scale=1`` is the classic sign-flipping Byzantine client; ``scale > 1``
+    additionally boosts the reversed update (Fang et al.-style model
+    poisoning) so a small adversarial minority can drag a plain mean."""
+
+    scale: float = 1.0
+
+    def corrupt(self, params, global_params, *, cid, seed, round_idx):
+        return _map_delta(params, global_params, lambda d: -self.scale * d)
+
+
+@dataclass(frozen=True)
+class ScaledUpdate(AttackModel):
+    """Model-replacement boosting: upload ``g + factor * (p - g)``.
+
+    With ``factor ~ n/k`` a single adversary's update survives averaging
+    nearly intact — the classic backdoor-insertion amplification.  The
+    direction is honest, the magnitude is not, which is exactly what
+    norm-blind means miss and coordinate-wise defenses clip."""
+
+    factor: float = 10.0
+
+    def corrupt(self, params, global_params, *, cid, seed, round_idx):
+        return _map_delta(params, global_params, lambda d: self.factor * d)
+
+
+@dataclass(frozen=True)
+class GaussianNoise(AttackModel):
+    """Additive parameter noise: upload ``p + sigma * z`` with ``z`` standard
+    normal, keyed by ``(seed, round, cid)`` so reruns are bit-identical."""
+
+    sigma: float = 1.0
+
+    def corrupt(self, params, global_params, *, cid, seed, round_idx):
+        rng = attack_rng(seed, round_idx, cid)
+        def one(p):
+            z = rng.standard_normal(p.shape).astype(np.float32)
+            return (p.astype(jnp.float32) + self.sigma * z).astype(p.dtype)
+        return jax.tree.map(one, params)
+
+
+@dataclass(frozen=True)
+class LabelSkewDrift(AttackModel):
+    """Per-round label-distribution rotation on the round clock.
+
+    Adversarial clients behave as if their local labels rotated by
+    ``(round // period) % C`` classes: their *classifier-head* update is
+    rolled along the label axis by that shift, so the poisoned gradient
+    mass lands on drifting wrong classes — label skew that moves over
+    time, not a fixed pathology robust means can memorize.  The label
+    axis is taken from the structurally-last parameter leaf (the head by
+    layer-ordering convention); every leaf whose trailing dimension
+    matches it is rotated, the rest pass through untouched."""
+
+    period: int = 1
+
+    def __post_init__(self):
+        super().__post_init__()
+        if self.period < 1:
+            raise ValueError(f"drift period must be >= 1, got {self.period}")
+
+    def shift(self, round_idx: int, n_classes: int) -> int:
+        return (int(round_idx) // self.period) % max(int(n_classes), 1)
+
+    def corrupt(self, params, global_params, *, cid, seed, round_idx):
+        leaves = jax.tree.leaves(params)
+        n_classes = int(leaves[-1].shape[-1]) if leaves else 0
+        k = self.shift(round_idx, n_classes)
+        if k == 0:
+            return params
+
+        def roll_head(d):
+            if d.ndim and d.shape[-1] == n_classes:
+                return jnp.roll(d, k, axis=-1)
+            return d
+        return _map_delta(params, global_params, roll_head)

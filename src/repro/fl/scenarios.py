@@ -26,6 +26,12 @@ A :class:`ScenarioSpec` composes those axes declaratively:
   timeout with sunk-cost accounting in
   :func:`repro.fl.simulation.plan_round_latency` /
   :func:`~repro.fl.simulation.plan_round_energy`);
+* **attack** — optionally an :class:`repro.fl.attacks.AttackModel`: a
+  static adversarial subset of the fleet whose uploads are corrupted
+  after local training and before aggregation (sign-flip, scaled
+  boosting, noise, label-skew drift), drawn per round against the
+  selected cohort exactly like the failure model — pair with the robust
+  aggregators in :mod:`repro.fl.aggregation` via ``FLConfig.aggregator``;
 * **trace** — optionally a :class:`repro.fl.traces.TraceSpec`: a
   replayable device trace (LiveLab-format CSV or the deterministic
   synthetic generator) that *replaces* the load and availability axes
@@ -469,6 +475,9 @@ class ScenarioSpec:
     trace: Optional[TraceSpec] = None     # replaces load+availability with a
     #                                       coherent replayed device trace
     regions: Optional[Tuple[RegionSpec, ...]] = None
+    attack: Any = None                    # AttackModel corrupting adversarial
+    #                                       uploads (repro.fl.attacks); None
+    #                                       = every client honest
 
     def build(self, n_devices: int, seed: int = 0):
         from repro.fl.simulation import DevicePool
@@ -508,7 +517,7 @@ class ScenarioSpec:
         return DevicePool(n_devices, seed=seed, tier_probs=tier_probs,
                           tiers=self.tiers, load_model=load,
                           availability=availability, failures=self.failures,
-                          **pool_kw)
+                          attack=self.attack, **pool_kw)
 
     def _region_models(self, region: RegionSpec, idx: int, count: int,
                        seed: int):
@@ -674,4 +683,36 @@ register_scenario(ScenarioSpec(
                 "timeout and upload nothing.",
     tier_probs=(0.15, 0.35, 0.50),
     failures=FailureModel(deadline_factor=1.5),
+))
+
+
+from repro.fl import attacks as _atk  # noqa: E402  (registrations below)
+
+register_scenario(ScenarioSpec(
+    name="byzantine-signflip",
+    description="30% of the fleet is Byzantine: compromised devices upload "
+                "boosted sign-flipped updates (g - 4*(p - g)), enough to "
+                "stall or reverse a plain mean — the canonical stress test "
+                "for trimmed-mean/Krum aggregation (FLConfig.aggregator).",
+    attack=_atk.SignFlip(fraction=0.3, scale=4.0),
+))
+
+register_scenario(ScenarioSpec(
+    name="byzantine-scaled",
+    description="20% model-replacement boosters: adversaries upload their "
+                "honest delta scaled 10x (backdoor-style amplification) "
+                "under mild churn — magnitude poisoning that norm-blind "
+                "averaging absorbs and coordinate-wise defenses clip.",
+    availability=ChurnAvailability(p_drop=0.1, p_join=0.5, init_online=0.9),
+    attack=_atk.ScaledUpdate(fraction=0.2, factor=10.0),
+))
+
+register_scenario(ScenarioSpec(
+    name="label-drift",
+    description="Drifting label skew: 30% of devices behave as if their "
+                "label distribution rotates one class every 2 rounds — "
+                "their classifier-head updates are rolled along the label "
+                "axis on the round clock, a moving pathology no static "
+                "robust mean can memorize.",
+    attack=_atk.LabelSkewDrift(fraction=0.3, period=2),
 ))

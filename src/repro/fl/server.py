@@ -51,7 +51,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.loader import FederatedData
-from repro.fl.aggregation import fedavg
+from repro.fl.aggregation import AGGREGATORS, robust_aggregate
 from repro.fl.engine import (
     COMPLETE_SEED_STRIDE,
     PROBE_SEED_STRIDE,
@@ -136,6 +136,20 @@ class FLConfig:
     #                               executor call (the mesh-sharded path),
     #                               "sequential" runs one call per region —
     #                               numerically identical
+    attack: Any = None            # adversarial clients (repro.fl.attacks):
+    #                               an AttackModel corrupting uploads after
+    #                               local training, before aggregation.
+    #                               None falls back to the scenario's attack
+    #                               (if it declares one); explicit models
+    #                               override it
+    aggregator: str = "mean"      # merge rule (repro.fl.aggregation):
+    #                               mean | trimmed_mean | coordinate_median
+    #                               | krum | multi_krum — "mean" is fedavg
+    #                               bit-for-bit; applied at every merge site
+    #                               (sync round, async buffer, topology tiers)
+    agg_trim: int = 1             # trimmed_mean: values cut per side/coord
+    agg_f: int = 1                # krum/multi_krum: tolerated adversaries
+    agg_m: int = 0                # multi_krum: updates kept (0 => m - f)
     seed: int = 0
 
 
@@ -230,6 +244,11 @@ class RoundResult:
     #                             selected devices that dropped mid-round
     stragglers: np.ndarray = field(default_factory=_empty_ids)
     #                             selected devices that missed the deadline
+    adversaries: np.ndarray = field(default_factory=_empty_ids)
+    #                             selected devices that were adversarial this
+    #                             round (repro.fl.attacks) — empty when the
+    #                             run has no attack, so benign construction
+    #                             and digests are unchanged
     n_available: int = -1         # fleet devices online this round
     # --- async-mode fields (one record per *aggregation*; defaults keep
     #     synchronous construction unchanged) ---
@@ -300,6 +319,14 @@ class FLServer:
                 self.pool.n_regions = cfg.regions
                 self.pool.region_names = [f"region{i}"
                                           for i in range(cfg.regions)]
+        if cfg.aggregator not in AGGREGATORS:
+            raise ValueError(f"unknown aggregator {cfg.aggregator!r}; "
+                             f"expected one of {AGGREGATORS}")
+        # explicit FLConfig.attack overrides the scenario's; corruption draws
+        # from a dedicated RNG stream (repro.fl.attacks.attack_rng), so
+        # attack=None runs consume exactly the RNG of pre-attack builds
+        self.attack = (cfg.attack if cfg.attack is not None
+                       else getattr(self.pool, "attack", None))
         self.rng = np.random.default_rng(cfg.seed + 17)
         from repro.core.features import get_feature_set   # deferred: repro.core
         #                                                   imports repro.fl
@@ -479,9 +506,26 @@ class FLServer:
                                 plan.probe_epochs, plan.completion_epochs,
                                 deadline_s=outcome.deadline_s)
 
+        # ---- attack injection (after training, before aggregation) ---
+        # adversarial survivors upload corrupted params; the draw and the
+        # corruption key off a dedicated (seed, round) RNG stream so the
+        # engine's own RNG consumption is untouched (attack=None bit-parity)
+        adversaries = _empty_ids()
+        if self.attack is not None and len(selected):
+            adv = self.attack.draw(cfg.n_devices, cfg.seed, ctx.round,
+                                   selected)
+            adversaries = selected[adv]
+            for i in adversaries:
+                if int(i) in client_results:
+                    client_results[int(i)] = self.attack.corrupt(
+                        client_results[int(i)], self.global_params,
+                        cid=int(i), seed=cfg.seed, round_idx=ctx.round)
+
         if client_results:
             weights = [self.data_sizes[i] for i in client_results]
-            self.global_params = fedavg(list(client_results.values()), weights)
+            self.global_params = robust_aggregate(
+                list(client_results.values()), weights, kind=cfg.aggregator,
+                trim=cfg.agg_trim, f=cfg.agg_f, m_select=cfg.agg_m or None)
 
         # ---- telemetry (deterministic: recording never perturbs a run) ---
         tel = self.telemetry
@@ -513,6 +557,7 @@ class FLServer:
             test_loss=test_loss, r_t=r_t, r_e=r_e, d_acc=d_acc, reward=reward,
             cum_time=self._cum_time, cum_energy=self._cum_energy,
             failed=outcome.failed, stragglers=outcome.stragglers,
+            adversaries=adversaries,
             n_available=int(ctx.available.sum()))
         self.history.append(result)
         policy.observe(ctx, result, probe_ids if plan.has_probe else None,

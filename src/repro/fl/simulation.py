@@ -87,6 +87,7 @@ class DevicePool:
                  tier_probs: Optional[List[float]] = None, *,
                  tiers: Optional[Sequence[Sequence[float]]] = None,
                  load_model=None, availability=None, failures=None,
+                 attack=None,
                  regions: Optional[np.ndarray] = None,
                  region_names: Optional[Sequence[str]] = None):
         from repro.fl.scenarios import (          # deferred: scenarios imports us
@@ -148,6 +149,12 @@ class DevicePool:
         self.availability = (availability if availability is not None
                              else AlwaysAvailable())
         self.failures = failures if failures is not None else FailureModel()
+        # optional AttackModel (repro.fl.attacks): which devices are
+        # compromised and how their uploads are corrupted.  Held here (not
+        # consumed) so the engines resolve scenario-declared attacks the
+        # same way they resolve failure models; attack draws use their own
+        # RNG stream, never self.rng
+        self.attack = attack
         self._load_state = self.load_model.init_state(n_devices, self.rng)
         self._avail_state = self.availability.init_state(n_devices, self.rng)
         self.round_idx = 0

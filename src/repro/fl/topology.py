@@ -56,7 +56,11 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.fl.aggregation import buffered_aggregate, compose_staleness, fedavg
+from repro.fl.aggregation import (
+    buffered_aggregate,
+    compose_staleness,
+    robust_aggregate,
+)
 from repro.fl.async_engine import AsyncRoundEngine
 from repro.fl.engine import (
     COMPLETE_SEED_STRIDE,
@@ -277,14 +281,20 @@ def resolve_topology(cfg, pool) -> Optional[AggregationTopology]:
 def fold_topology(topo: AggregationTopology, global_params: Params,
                   deltas: Dict[str, Tuple[Params, float]],
                   lags: Optional[Dict[str, float]] = None, *,
-                  kind: str = "constant", a: float = 0.5, b: int = 4
-                  ) -> Params:
+                  kind: str = "constant", a: float = 0.5, b: int = 4,
+                  robust: str = "mean", trim: int = 1, f: int = 1,
+                  m_select: Optional[int] = None) -> Params:
     """Fold per-leaf deltas ``{leaf: (params, weight)}`` up the tree into a
     new global model.  Each tier (and the root) merges its present children
     with :func:`buffered_aggregate` — weights are the children's total data
     mass, lags per node from ``lags`` (default 0, where every staleness
     kind weighs exactly 1, the flat-parity anchor).  Absent leaves (offline
-    or empty regions) are skipped; their tiers fold whatever arrived."""
+    or empty regions) are skipped; their tiers fold whatever arrived.
+
+    A non-``"mean"`` ``robust`` kind makes every tier fold Byzantine-robust
+    (a compromised *region* is out-voted at its parent tier the same way a
+    compromised client is out-voted at the edge); the default keeps each
+    fold bit-for-bit the staleness-weighted mean."""
     lags = lags or {}
     nodes = dict(deltas)
     for tier in topo.tiers:
@@ -294,7 +304,8 @@ def fold_topology(topo: AggregationTopology, global_params: Params,
         ps, ws = zip(*(nodes.pop(c) for c in kids))
         merged = buffered_aggregate(
             global_params, list(ps), list(ws),
-            [lags.get(c, 0) for c in kids], kind=kind, a=a, b=b)
+            [lags.get(c, 0) for c in kids], kind=kind, a=a, b=b,
+            robust=robust, trim=trim, f=f, m_select=m_select)
         nodes[tier.name] = (merged, float(sum(ws)))
     kids = [c for c in (*topo.leaves, *(t.name for t in topo.tiers))
             if c in nodes]
@@ -303,7 +314,9 @@ def fold_topology(topo: AggregationTopology, global_params: Params,
     ps, ws = zip(*(nodes[c] for c in kids))
     return buffered_aggregate(global_params, list(ps), list(ws),
                               [lags.get(c, 0) for c in kids],
-                              kind=kind, a=a, b=b)
+                              kind=kind, a=a, b=b,
+                              robust=robust, trim=trim, f=f,
+                              m_select=m_select)
 
 
 # ---------------------------------------------------------------------------
@@ -443,6 +456,24 @@ def run_topology_round(srv, policy):
                                    for i in g["survivors"]
                                    if int(i) in probe_params}
 
+    # ---- attack injection (per region, before the edge fold) ---------
+    # same contract as the flat engine: adversarial survivors' uploads are
+    # corrupted relative to the dispatch-time global model, keyed by
+    # (seed, round, cid) through the dedicated attack RNG stream — the
+    # per-region draw is a pure gather of the static adversary mask, so a
+    # single-region topology replays the flat engine's draw exactly
+    for g in regions:
+        g["adversaries"] = np.empty(0, dtype=np.int64)
+        if srv.attack is not None and len(g["selected"]):
+            adv = srv.attack.draw(cfg.n_devices, cfg.seed, base_ctx.round,
+                                  g["selected"])
+            g["adversaries"] = g["selected"][adv]
+            for i in g["adversaries"]:
+                if int(i) in g["client_results"]:
+                    g["client_results"][int(i)] = srv.attack.corrupt(
+                        g["client_results"][int(i)], srv.global_params,
+                        cid=int(i), seed=cfg.seed, round_idx=base_ctx.round)
+
     # ---- per-region accounting; regions run in parallel --------------
     for g in regions:
         ctx_r, plan = g["ctx"], g["plan"]
@@ -458,17 +489,23 @@ def run_topology_round(srv, policy):
     r_e = sum(g["r_e"] for g in regions)
 
     # ---- fold: clients -> region deltas -> tiers -> root -------------
+    # the edge fold is where robust aggregation bites: adversarial clients
+    # are out-voted inside their region before the delta crosses the tree
+    # (aggregator="mean" keeps robust_aggregate == fedavg bit-for-bit)
     deltas: Dict[str, Tuple[Params, float]] = {}
     for g in regions:
         if g["client_results"]:
             ws = [srv.data_sizes[i] for i in g["client_results"]]
             deltas[g["name"]] = (
-                fedavg(list(g["client_results"].values()), ws),
+                robust_aggregate(list(g["client_results"].values()), ws,
+                                 kind=cfg.aggregator, trim=cfg.agg_trim,
+                                 f=cfg.agg_f, m_select=cfg.agg_m or None),
                 float(sum(ws)))
     if deltas:
         srv.global_params = fold_topology(
             topo, srv.global_params, deltas, kind=cfg.staleness,
-            a=cfg.staleness_a, b=cfg.staleness_b)
+            a=cfg.staleness_a, b=cfg.staleness_b, robust=cfg.aggregator,
+            trim=cfg.agg_trim, f=cfg.agg_f, m_select=cfg.agg_m or None)
 
     # ---- telemetry (flat engine's feed order, concatenated) ----------
     def _concat(key):
@@ -522,6 +559,7 @@ def run_topology_round(srv, policy):
         acc=acc, test_loss=test_loss, r_t=r_t, r_e=r_e, d_acc=d_acc,
         reward=reward, cum_time=srv._cum_time, cum_energy=srv._cum_energy,
         failed=all_failed, stragglers=all_strag,
+        adversaries=_concat("adversaries"),
         n_available=int(base_ctx.available.sum()),
         tier_staleness=tier_staleness)
     srv.history.append(result)
@@ -548,6 +586,8 @@ class RegionDelta:
     seq: int                  # region-merge order (stable root merge order)
     cids: np.ndarray          # merged client ids
     client_lags: np.ndarray   # per-client REGION-tier version lags
+    adversaries: np.ndarray = field(default_factory=lambda: np.empty(
+        0, dtype=np.int64))   # merged clients flagged by the attack model
 
 
 class HierarchicalAsyncEngine(AsyncRoundEngine):
@@ -666,13 +706,17 @@ class HierarchicalAsyncEngine(AsyncRoundEngine):
         weights = [float(self.srv.data_sizes[j.cid]) for j in take]
         params = buffered_aggregate(
             self.srv.global_params, [j.params for j in take], weights, lags,
-            kind=cfg.staleness, a=cfg.staleness_a, b=cfg.staleness_b)
+            kind=cfg.staleness, a=cfg.staleness_a, b=cfg.staleness_b,
+            robust=cfg.aggregator, trim=cfg.agg_trim, f=cfg.agg_f,
+            m_select=cfg.agg_m or None)
         self.root_buffer.append(RegionDelta(
             name=self.topo.leaves[r], params=params,
             weight=float(sum(weights)), version=self.version,
             seq=self._delta_seq,
             cids=np.array([j.cid for j in take], dtype=np.int64),
-            client_lags=lags))
+            client_lags=lags,
+            adversaries=np.array([j.cid for j in take if j.adversarial],
+                                 dtype=np.int64)))
         self._delta_seq += 1
 
     def _ready(self) -> bool:
@@ -702,6 +746,9 @@ class HierarchicalAsyncEngine(AsyncRoundEngine):
         take, self.root_buffer = (self.root_buffer[:self.fanin],
                                   self.root_buffer[self.fanin:])
         root_lags = np.array([self.version - d.version for d in take])
+        # the root fold stays a staleness-weighted mean: its inputs are
+        # region deltas already robustly reduced at the edge (the tier with
+        # client-level redundancy to vote over)
         srv.global_params = buffered_aggregate(
             srv.global_params, [d.params for d in take],
             [d.weight for d in take], root_lags,
@@ -736,6 +783,9 @@ class HierarchicalAsyncEngine(AsyncRoundEngine):
             r_t=r_t, r_e=r_e, d_acc=d_acc, reward=reward,
             cum_time=srv._cum_time, cum_energy=srv._cum_energy,
             failed=np.asarray(sorted(self._failed_since_agg), dtype=np.int64),
+            adversaries=np.asarray(
+                sorted(int(i) for d in take for i in d.adversaries),
+                dtype=np.int64),
             n_available=int(self._mask.sum()),
             mean_staleness=float(total_lags.mean()),
             max_staleness=int(total_lags.max()),

@@ -1,0 +1,256 @@
+"""Adversarial attack battery: corruption semantics, engine threading, parity.
+
+Three layers, mirroring the attack contract in :mod:`repro.fl.attacks`:
+
+* **corruption algebra** — each concrete attack's ``corrupt`` is checked
+  against its closed form on a toy pytree (sign-flip reversal, replacement
+  boosting, keyed noise, head-only label rotation on the round clock);
+* **engine threading** — both round regimes draw the same static adversary
+  subset, record it in ``RoundResult.adversaries``, and never let the
+  attack stream touch round mechanics (selection, failures, availability
+  are bit-identical attacked vs not — only parameters and accuracy move);
+* **defense end-to-end** — 30% boosted sign-flip adversaries crater plain
+  fedavg while trimmed-mean stays within tolerance of the clean run
+  (IID partition: coordinate-wise trimming needs real averaging mass to
+  keep, which dirichlet sigma=0.1 pathology would deny any aggregator).
+
+The 0%-adversary bit-parity tests are the anchor the golden suite relies
+on: an attacked config with nothing to corrupt consumes exactly the RNG of
+an unattacked one, so the ten pre-attack golden digests stay byte-identical.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl import (
+    AttackModel,
+    FLConfig,
+    FLServer,
+    GaussianNoise,
+    LabelSkewDrift,
+    RoundResult,
+    ScaledUpdate,
+    SignFlip,
+    build_policy,
+    get_scenario,
+)
+
+
+def _toy_params(seed=0, n_classes=5):
+    rng = np.random.default_rng(seed)
+    return {
+        "w1": jnp.asarray(rng.normal(size=(4, 3)), dtype=jnp.float32),
+        "b1": jnp.asarray(rng.normal(size=(3,)), dtype=jnp.float32),
+        "w2": jnp.asarray(rng.normal(size=(3, n_classes)), dtype=jnp.float32),
+        "b2": jnp.asarray(rng.normal(size=(n_classes,)), dtype=jnp.float32),
+    }
+
+
+def _allclose(a, b, **kw):
+    return all(np.allclose(x, y, **kw)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# corruption algebra
+# ---------------------------------------------------------------------------
+
+def test_base_attack_corrupts_nothing():
+    g, p = _toy_params(0), _toy_params(1)
+    out = AttackModel(fraction=0.0).corrupt(
+        p, g, cid=3, seed=0, round_idx=2)
+    assert out is p
+
+
+def test_signflip_is_boosted_reversal():
+    g, p = _toy_params(0), _toy_params(1)
+    out = SignFlip(fraction=0.5, scale=3.0).corrupt(
+        p, g, cid=0, seed=0, round_idx=0)
+    want = jax.tree.map(lambda gl, pl: gl - 3.0 * (pl - gl), g, p)
+    assert _allclose(out, want, atol=1e-6)
+
+
+def test_scaled_update_is_replacement_boosting():
+    g, p = _toy_params(0), _toy_params(1)
+    out = ScaledUpdate(fraction=0.5, factor=8.0).corrupt(
+        p, g, cid=0, seed=0, round_idx=0)
+    want = jax.tree.map(lambda gl, pl: gl + 8.0 * (pl - gl), g, p)
+    assert _allclose(out, want, atol=1e-5)
+
+
+def test_gaussian_noise_keyed_by_seed_round_cid():
+    g, p = _toy_params(0), _toy_params(1)
+    atk = GaussianNoise(fraction=0.5, sigma=0.5)
+    a = atk.corrupt(p, g, cid=2, seed=9, round_idx=4)
+    b = atk.corrupt(p, g, cid=2, seed=9, round_idx=4)
+    assert _allclose(a, b)  # bit-reproducible
+    for other in (dict(cid=3, seed=9, round_idx=4),
+                  dict(cid=2, seed=8, round_idx=4),
+                  dict(cid=2, seed=9, round_idx=5)):
+        c = atk.corrupt(p, g, **other)
+        assert not _allclose(a, c)  # any key change moves the noise
+    # noise is additive on the upload, not the delta
+    diffs = [np.asarray(x - y) for x, y
+             in zip(jax.tree.leaves(a), jax.tree.leaves(p))]
+    flat = np.concatenate([d.ravel() for d in diffs])
+    assert 0.2 < flat.std() < 0.8  # ~ sigma=0.5
+
+
+def test_label_skew_drift_rolls_only_the_head():
+    g, p = _toy_params(0, n_classes=5), _toy_params(1, n_classes=5)
+    atk = LabelSkewDrift(fraction=0.5, period=2)
+    # rounds 0,1 -> shift 0 (identity); rounds 2,3 -> shift 1; 10 -> shift 0
+    assert [atk.shift(r, 5) for r in (0, 1, 2, 3, 4, 10)] == [0, 0, 1, 1, 2, 0]
+    assert atk.corrupt(p, g, cid=0, seed=0, round_idx=1) is p
+    out = atk.corrupt(p, g, cid=0, seed=0, round_idx=2)
+    # head leaves (trailing dim == n_classes) rolled by 1 on the delta ...
+    for leaf in ("w2", "b2"):
+        want = g[leaf] + jnp.roll(p[leaf] - g[leaf], 1, axis=-1)
+        assert np.allclose(out[leaf], want, atol=1e-6)
+    # ... body leaves pass through untouched
+    for leaf in ("w1", "b1"):
+        assert np.allclose(out[leaf], p[leaf], atol=1e-6)
+
+
+def test_label_skew_drift_validates_period():
+    with pytest.raises(ValueError):
+        LabelSkewDrift(fraction=0.1, period=0)
+
+
+# ---------------------------------------------------------------------------
+# engine threading
+# ---------------------------------------------------------------------------
+
+def _cfg(mode="sync", attack=None, rounds=3, **kw):
+    base = dict(n_devices=20, k_select=5, rounds=rounds, l_ep=1, lr=0.1,
+                seed=11, scenario="uniform", attack=attack)
+    if mode == "async":
+        base.update(mode="async", async_concurrency=6, staleness="polynomial")
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def test_round_result_adversaries_defaults_empty():
+    r = RoundResult(round=0, acc=0.1, test_loss=1.0, r_t=0.0, r_e=0.0,
+                    cum_time=0.0, cum_energy=0.0,
+                    selected=np.empty(0, dtype=np.int64),
+                    failed=np.empty(0, dtype=np.int64),
+                    probe_set=np.empty(0, dtype=np.int64),
+                    d_acc=0.0, reward=0.0)
+    assert r.adversaries.dtype == np.int64 and len(r.adversaries) == 0
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_adversaries_recorded_and_subset_of_static_mask(mode, mlp_task,
+                                                        fl_data):
+    atk = SignFlip(fraction=0.3, scale=2.0)
+    cfg = _cfg(mode, attack=atk)
+    hist = FLServer(cfg, mlp_task, fl_data).run(build_policy("fedavg"))
+    static = set(np.flatnonzero(atk.adversary_mask(cfg.n_devices, cfg.seed)))
+    fired = False
+    for r in hist:
+        advs = set(int(i) for i in r.adversaries)
+        fired = fired or bool(advs)
+        assert advs <= static  # compromised devices, not coin flips
+        if mode == "sync":  # sync merges exactly the surviving cohort
+            assert advs <= set(int(i) for i in r.selected)
+    assert fired, "30% adversaries never drawn in 3 rounds"
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_zero_fraction_attack_is_bit_identical(mode, mlp_task, fl_data):
+    """The parity anchor: an armed-but-empty attack consumes no engine RNG,
+    so the run is bit-for-bit the unattacked one."""
+    clean = FLServer(_cfg(mode), mlp_task, fl_data)
+    armed = FLServer(_cfg(mode, attack=SignFlip(fraction=0.0, scale=4.0)),
+                     mlp_task, fl_data)
+    h0 = clean.run(build_policy("fedavg"))
+    h1 = armed.run(build_policy("fedavg"))
+    for a, b in zip(h0, h1):
+        assert a.acc == b.acc and a.test_loss == b.test_loss
+        assert np.array_equal(a.selected, b.selected)
+        assert np.array_equal(a.failed, b.failed)
+        assert len(b.adversaries) == 0
+    for x, y in zip(jax.tree.leaves(clean.global_params),
+                    jax.tree.leaves(armed.global_params)):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_attack_perturbs_params_never_round_mechanics(mlp_task, fl_data):
+    """Corruption moves parameters and accuracy ONLY: selection, failure
+    draws and availability — everything telemetry records — are identical
+    attacked vs not, under the same config and seed."""
+    h0 = FLServer(_cfg(), mlp_task, fl_data).run(build_policy("fedavg"))
+    h1 = FLServer(_cfg(attack=SignFlip(fraction=0.3, scale=4.0)),
+                  mlp_task, fl_data).run(build_policy("fedavg"))
+    for a, b in zip(h0, h1):
+        assert np.array_equal(a.selected, b.selected)
+        assert np.array_equal(a.failed, b.failed)
+        assert a.n_available == b.n_available
+        assert a.r_t == b.r_t
+    assert any(len(b.adversaries) for b in h1)
+    assert any(a.acc != b.acc for a, b in zip(h0, h1))
+
+
+@pytest.mark.parametrize("mode", ["sync", "async"])
+def test_attack_reaches_hierarchical_edge_folds(mode, mlp_task, fl_data):
+    """Regioned fleets corrupt per edge cohort and robust-reduce at the
+    leaf folds; the root fold merges already-reduced region deltas."""
+    cfg = _cfg(mode, attack=SignFlip(fraction=0.4, scale=2.0),
+               scenario="hierarchical", aggregator="trimmed_mean",
+               agg_trim=1)
+    hist = FLServer(cfg, mlp_task, fl_data).run(build_policy("fedavg"))
+    assert any(len(r.adversaries) for r in hist)
+    static = set(np.flatnonzero(
+        SignFlip(fraction=0.4).adversary_mask(cfg.n_devices, cfg.seed)))
+    for r in hist:
+        assert set(int(i) for i in r.adversaries) <= static
+
+
+def test_scenario_attack_threads_through_pool_to_server(mlp_task, fl_data):
+    for name, cls, fraction in [("byzantine-signflip", SignFlip, 0.3),
+                                ("byzantine-scaled", ScaledUpdate, 0.2),
+                                ("label-drift", LabelSkewDrift, 0.3)]:
+        spec = get_scenario(name)
+        assert isinstance(spec.attack, cls)
+        assert spec.attack.fraction == fraction
+        cfg = FLConfig(n_devices=8, k_select=3, rounds=1, l_ep=1, lr=0.1,
+                       seed=0, scenario=name)
+        srv = FLServer(cfg, mlp_task, fl_data)
+        assert srv.attack is spec.attack  # pool-declared, server-adopted
+
+
+# ---------------------------------------------------------------------------
+# defense end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def iid_data():
+    from repro.data import (FederatedData, iid_partition,
+                            make_classification_data)
+
+    train, test = make_classification_data(n_samples=4000, seed=0)
+    return FederatedData(train, test, iid_partition(len(train.y), 20, seed=0))
+
+
+def test_trimmed_mean_defends_where_fedavg_craters(mlp_task, iid_data):
+    """30% boosted sign-flip: plain fedavg collapses below chance-level
+    noise while trimmed-mean (trim above the expected cohort adversary
+    count) stays within tolerance of the clean run."""
+    def run(scenario, aggregator="mean"):
+        cfg = FLConfig(n_devices=20, k_select=10, rounds=8, l_ep=2, lr=0.1,
+                       seed=7, scenario=scenario, aggregator=aggregator,
+                       agg_trim=4, agg_f=3)
+        return FLServer(cfg, mlp_task, iid_data).run(
+            build_policy("fedavg"))[-1].acc
+
+    clean = run("uniform")
+    attacked = run("byzantine-signflip")
+    defended = run("byzantine-signflip", "trimmed_mean")
+    assert clean > 0.7  # the task is learnable in 8 rounds
+    assert attacked < 0.4, (
+        f"sign-flip should crater plain fedavg, got {attacked:.3f}")
+    assert defended >= clean - 0.15, (
+        f"trimmed-mean should track the clean run: {defended:.3f} "
+        f"vs clean {clean:.3f}")

@@ -43,14 +43,30 @@ CASES = [
     ("hierarchical", "async", "fedavg"),
 ]
 
+# adversarial cases (repro.fl.attacks): the byzantine-signflip scenario under
+# the plain mean ("fedavg") and under Krum, both regimes.  The aggregator
+# takes the filename's policy slot (the selection policy is fedavg
+# throughout) — these pin the attack draw, the corruption math and the
+# robust merge path.  k=5 cohorts: the 3-cohorts of the benign cases miss
+# the static adversary subset for all 3 rounds at this seed
+ATTACK_CASES = [
+    ("byzantine-signflip", "sync", "fedavg"),
+    ("byzantine-signflip", "sync", "krum"),
+    ("byzantine-signflip", "async", "fedavg"),
+    ("byzantine-signflip", "async", "krum"),
+]
 
-def _run_case(scenario, mode, policy_name, mlp_task, fl_data):
-    kw = dict(n_devices=20, k_select=3, rounds=3, l_ep=2, lr=0.1, seed=7,
+
+def _run_case(scenario, mode, policy_name, mlp_task, fl_data,
+              aggregator="fedavg", k=3):
+    kw = dict(n_devices=20, k_select=k, rounds=3, l_ep=2, lr=0.1, seed=7,
               scenario=scenario)
+    if aggregator != "fedavg":  # "fedavg" IS the plain mean — the default
+        kw.update(aggregator=aggregator, agg_f=1, agg_trim=1)
     if mode == "async":
         kw.update(mode="async", async_concurrency=6, staleness="polynomial")
     srv = FLServer(FLConfig(**kw), mlp_task, fl_data)
-    pol_kw = {"k": 3, "seed": 7} if policy_name == "fedrank" else {}
+    pol_kw = {"k": k, "seed": 7} if policy_name == "fedrank" else {}
     hist = srv.run(build_policy(policy_name, **pol_kw))
     return [{
         "round": r.round,
@@ -68,6 +84,10 @@ def _run_case(scenario, mode, policy_name, mlp_task, fl_data):
         **({"tier_staleness": {k: round(v, 4)
                                for k, v in sorted(r.tier_staleness.items())}}
            if r.tier_staleness else {}),
+        # adversarial runs only: which merged clients were corrupted.
+        # Omitted when empty so the ten pre-attack digests stay byte-identical
+        **({"adversaries": sorted(int(i) for i in r.adversaries)}
+           if len(r.adversaries) else {}),
     } for r in hist]
 
 
@@ -95,6 +115,36 @@ def test_golden_trajectory(scenario, mode, policy, mlp_task, fl_data,
         diff = {k: (want[k], got[k]) for k in want if got.get(k) != want[k]}
         assert not diff, (
             f"{scenario}/{mode}/{policy} round {want['round']} drifted "
+            f"(golden, current): {diff} — if intentional, regenerate with "
+            "pytest --regen-golden and commit the diff")
+
+
+@pytest.mark.parametrize("scenario,mode,aggregator", ATTACK_CASES,
+                         ids=[f"{s}-{m}-{a}" for s, m, a in ATTACK_CASES])
+def test_golden_attack_trajectory(scenario, mode, aggregator, mlp_task,
+                                  fl_data, regen_golden):
+    digest = _run_case(scenario, mode, "fedavg", mlp_task, fl_data,
+                       aggregator=aggregator, k=5)
+    assert any("adversaries" in row for row in digest), (
+        f"{scenario}/{mode}/{aggregator}: the attack never fired in 3 "
+        "rounds — the golden would pin nothing adversarial")
+    path = os.path.join(GOLDEN_DIR, f"{scenario}_{mode}_{aggregator}.json")
+    if regen_golden:
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(digest, f, indent=1)
+            f.write("\n")
+        return
+    assert os.path.exists(path), (
+        f"missing golden digest {os.path.relpath(path)} — generate it with "
+        "pytest --regen-golden and commit it")
+    with open(path) as f:
+        golden = json.load(f)
+    assert len(digest) == len(golden)
+    for got, want in zip(digest, golden):
+        diff = {k: (want[k], got[k]) for k in want if got.get(k) != want[k]}
+        assert not diff, (
+            f"{scenario}/{mode}/{aggregator} round {want['round']} drifted "
             f"(golden, current): {diff} — if intentional, regenerate with "
             "pytest --regen-golden and commit the diff")
 

@@ -13,9 +13,14 @@ from hypothesis import strategies as st
 from repro.fl.aggregation import (
     STALENESS_KINDS,
     buffered_aggregate,
+    coordinate_median,
     fedavg,
+    krum,
+    krum_scores,
     staleness_weight,
+    trimmed_mean,
 )
+from repro.fl.attacks import AttackModel, SignFlip
 from repro.fl.telemetry import DeviceTelemetry
 
 
@@ -81,6 +86,151 @@ def test_global_model_is_fixed_point(kind, n, seed):
     merged = buffered_aggregate(g, clients, weights, lags, kind=kind)
     for a, b in zip(jax.tree.leaves(merged), jax.tree.leaves(g)):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# robust aggregation invariants (repro.fl.attacks defenses)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_honest=st.integers(min_value=3, max_value=8),
+       n_adv=st.integers(min_value=1, max_value=3),
+       boost=st.floats(min_value=1.0, max_value=100.0),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_trimmed_mean_bounded_by_honest_range(n_honest, n_adv, boost, seed):
+    """Once ``trim >= adversary count``, every poisoned coordinate is an
+    extreme in the sorted column, so the trimmed mean is coordinate-wise
+    bounded by the honest min/max — no matter how hard the boost."""
+    if n_honest <= 2 * n_adv:
+        n_honest = 2 * n_adv + 1          # keep survivors after the trim
+    rng = np.random.default_rng(seed)
+    honest = [_params(seed + i) for i in range(n_honest)]
+    # adversaries push far outside the honest cloud in both directions
+    adv = [jax.tree.map(lambda x, s=s: s * boost * (np.abs(x) + 1.0), honest[0])
+           for s in ([-1.0, 1.0] * n_adv)[:n_adv]]
+    weights = rng.uniform(0.5, 20.0, size=n_honest + n_adv).tolist()
+    out = trimmed_mean(honest + adv, weights, trim=n_adv)
+    for leaf, *hleaves in zip(jax.tree.leaves(out),
+                              *(jax.tree.leaves(h) for h in honest)):
+        stack = np.stack([np.asarray(h) for h in hleaves])
+        assert np.all(np.asarray(leaf) >= stack.min(axis=0) - 1e-5)
+        assert np.all(np.asarray(leaf) <= stack.max(axis=0) + 1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(min_value=1, max_value=6),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_trimmed_mean_trim0_is_fedavg(n, seed):
+    """trim=0 must be fedavg BIT-FOR-BIT (same code path, not just close) —
+    the reduction anchor that keeps aggregator="mean" golden digests safe."""
+    rng = np.random.default_rng(seed)
+    clients = [_params(seed + i) for i in range(n)]
+    weights = rng.uniform(0.1, 30.0, size=n).tolist()
+    a = trimmed_mean(clients, weights, trim=0)
+    b = fedavg(clients, weights)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(min_value=1, max_value=7),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_coordinate_median_permutation_invariant(n, seed):
+    """The median is an order statistic: reordering the buffer can't move
+    it, and a buffer of identical updates is a fixed point."""
+    rng = np.random.default_rng(seed)
+    clients = [_params(seed + i) for i in range(n)]
+    perm = rng.permutation(n)
+    a = coordinate_median(clients)
+    b = coordinate_median([clients[i] for i in perm])
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    same = [jax.tree.map(np.copy, clients[0]) for _ in range(n)]
+    fp = coordinate_median(same)
+    for x, y in zip(jax.tree.leaves(fp), jax.tree.leaves(clients[0])):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(f=st.integers(min_value=1, max_value=3),
+       extra=st.integers(min_value=0, max_value=4),
+       boost=st.floats(min_value=5.0, max_value=1000.0),
+       seed=st.integers(min_value=0, max_value=10_000))
+def test_krum_never_selects_outliers(f, extra, boost, seed):
+    """With ``n >= 2f + 3`` honest-majority updates clustered together and
+    ``f`` boosted outliers, Krum's distance score must reject every
+    outlier (Blanchard et al.'s selection guarantee)."""
+    n = 2 * f + 3 + extra
+    rng = np.random.default_rng(seed)
+    base = _params(seed)
+    honest = [jax.tree.map(
+        lambda x: x + rng.normal(scale=1e-2, size=x.shape).astype(np.float32),
+        base) for _ in range(n - f)]
+    outliers = [jax.tree.map(lambda x: x + np.float32(boost), base)
+                for _ in range(f)]
+    clients = honest + outliers
+    scores = krum_scores(clients, f=f)
+    assert int(np.argmin(scores)) < len(honest)
+    chosen = krum(clients, f=f)
+    for x, *hs in zip(jax.tree.leaves(chosen),
+                      *(jax.tree.leaves(h) for h in honest)):
+        stack = np.stack([np.asarray(h) for h in hs])
+        assert np.all(np.asarray(x) >= stack.min(axis=0))
+        assert np.all(np.asarray(x) <= stack.max(axis=0))
+
+
+# ---------------------------------------------------------------------------
+# attack draws: deterministic in (seed, round), RNG-free for telemetry
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(min_value=4, max_value=200),
+       frac_pct=st.integers(min_value=0, max_value=100),
+       seed=st.integers(min_value=0, max_value=10_000),
+       round_idx=st.integers(min_value=0, max_value=500))
+def test_attack_draw_deterministic_and_static(n, frac_pct, seed, round_idx):
+    """Membership is exact (round(fraction*n) devices), static across
+    rounds, and every draw is a pure function of (n, seed, round, ids) —
+    repeated calls return identical masks with no shared-RNG coupling."""
+    atk = SignFlip(fraction=frac_pct / 100.0)
+    mask = atk.adversary_mask(n, seed)
+    assert mask.sum() == int(round(atk.fraction * n))
+    np.testing.assert_array_equal(mask, atk.adversary_mask(n, seed))
+    ids = np.random.default_rng(seed + 1).choice(n, size=min(5, n),
+                                                 replace=False)
+    d1 = atk.draw(n, seed, round_idx, ids)
+    d2 = atk.draw(n, seed, round_idx, ids)
+    np.testing.assert_array_equal(d1, d2)
+    np.testing.assert_array_equal(d1, mask[ids])      # static membership
+    np.testing.assert_array_equal(d1, atk.draw(n, seed, round_idx + 1, ids))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_attack_draw_never_consumes_engine_rng(seed):
+    """Attack draws use their own keyed stream: interleaving them with an
+    engine generator must not change what the engine generator produces —
+    the invariant that keeps telemetry recording and failure draws
+    unperturbed by enabling an attack."""
+    atk = SignFlip(fraction=0.4)
+    rng_a = np.random.default_rng(seed)
+    a = [rng_a.random(8) for _ in range(4)]
+    rng_b = np.random.default_rng(seed)
+    b = []
+    for r in range(4):
+        atk.draw(50, seed, r, np.arange(10))          # interleaved draws
+        atk.adversary_mask(50, seed)
+        b.append(rng_b.random(8))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_attack_model_validation():
+    with pytest.raises(ValueError, match="fraction"):
+        AttackModel(fraction=1.5)
+    with pytest.raises(ValueError, match="fraction"):
+        SignFlip(fraction=-0.1)
 
 
 # ---------------------------------------------------------------------------

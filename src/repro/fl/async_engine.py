@@ -32,6 +32,24 @@ through those gaps instead of around them — the FedBuff/FedAsync recipe:
   clock (overlapping work is NOT summed), and energy is charged per job as
   it completes (pro-rata for mid-job dropouts).
 
+**Compiled event loop.**  Job state lives in a struct-of-arrays table
+(:class:`_JobTable`) keyed by ABSOLUTE dispatch/deadline timestamps: a
+job's completion time is ``online_since + (end_active - done_active)``,
+one vectorized expression over the whole table, instead of the historical
+per-event ``elapsed_s += dt`` sweep (which compounded float error across
+thousands of events and made event batching order-unstable near ties).
+The loop advances one event *window* at a time
+(:meth:`AsyncRoundEngine._step`): all job events up to the next
+"interesting" event — a dropout or probe exit (frees a device/slot), a
+completion that fills a merge threshold, or an availability transition —
+are processed in one batch, grouped into the same ``_EPS`` instants the
+one-at-a-time loop forms and ordered by dispatch ``seq`` inside each
+group, so the batched loop is *bit-identical* to the sequential oracle
+(``FLConfig.async_events="sequential"``, the parity anchor in
+``tests/test_async_engine.py``).  Executor results are left on device at
+dispatch and only materialized when their completion event lands, so
+vmapped training dispatch overlaps the host's event-window reduction.
+
 Reduction anchor: with ``buffer_size = concurrency = K``, an
 always-available scenario and ``constant`` weighting, every wave is
 dispatched at one version, fully arrives, and aggregates — the engine
@@ -41,8 +59,8 @@ an identical global model (``tests/test_async_engine.py``).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -58,10 +76,13 @@ Params = Any
 
 _EPS = 1e-9          # event-time slop: treat |dt| < _EPS as "now"
 
+EVENT_MODES = ("batched", "sequential")
+
 
 @dataclass
 class AsyncJob:
-    """One device's in-flight work item on the virtual clock."""
+    """One completed update in a merge buffer (the record the aggregation
+    tiers consume; in-flight state lives in :class:`_JobTable`)."""
 
     cid: int
     version: int              # global-model version at dispatch
@@ -72,7 +93,7 @@ class AsyncJob:
     params: Optional[Params]  # None => probe-only job (never uploads)
     loss: float               # final local-epoch loss (revealed on upload)
     fail_at_s: float          # active seconds until mid-job dropout (inf)
-    elapsed_s: float = 0.0    # active seconds done so far
+    dispatched_at: float = 0.0  # absolute virtual time the wave fired
     adversarial: bool = False  # upload corrupted by the scenario's attack
     #                            model (repro.fl.attacks) at dispatch
 
@@ -82,12 +103,132 @@ class AsyncJob:
         return min(self.duration_s, self.fail_at_s)
 
 
+def event_groups(times: np.ndarray, eps: float = _EPS) -> List[Tuple[int, int]]:
+    """Greedy ``eps``-instants over SORTED event times: each group spans
+    ``[t0, t0 + eps]`` from its earliest member — exactly the due-set rule
+    the one-at-a-time loop applies per step (``end <= now + eps`` after
+    jumping to the minimum), so batched windows replay the same batches.
+    Returns ``(start, end)`` index pairs into ``times``."""
+    groups: List[Tuple[int, int]] = []
+    i, n = 0, len(times)
+    while i < n:
+        j = int(np.searchsorted(times, times[i] + eps, side="right"))
+        groups.append((i, j))
+        i = j
+    return groups
+
+
+class _JobTable:
+    """Struct-of-arrays store for in-flight jobs, keyed by absolute time.
+
+    Per slot: ``end_active`` active seconds end the job (completion or
+    mid-job dropout, whichever is sooner), ``done_active`` seconds were
+    banked before the current online stretch, and ``online_since`` is the
+    absolute virtual time the stretch began (NaN while the device is
+    offline) — so the absolute completion time of every running job is the
+    single vectorized expression ``online_since + (end_active -
+    done_active)``, with paused jobs at ``+inf``.  Deriving event times
+    from absolutes (instead of accumulating ``elapsed += dt`` per event)
+    is what makes batched and sequential event processing bit-identical.
+    """
+
+    _F64 = ("duration", "energy", "fail_at", "end_active", "done_active",
+            "online_since", "dispatched_at")
+    _I64 = ("cid", "version", "seq", "cycle")
+    _BOOL = ("is_upload", "adversarial", "active")
+
+    def __init__(self, capacity: int = 64):
+        self.cap = capacity
+        for name in self._F64:
+            setattr(self, name, np.zeros(capacity))
+        for name in self._I64:
+            setattr(self, name, np.zeros(capacity, np.int64))
+        for name in self._BOOL:
+            setattr(self, name, np.zeros(capacity, bool))
+        self.payload: Dict[int, Tuple[Optional[Params], Any]] = {}
+        self._free = list(range(capacity - 1, -1, -1))
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def _grow(self) -> None:
+        old = self.cap
+        self.cap = old * 2
+        for name in self._F64 + self._I64 + self._BOOL:
+            arr = getattr(self, name)
+            setattr(self, name, np.concatenate(
+                [arr, np.zeros(old, arr.dtype)]))
+        self._free.extend(range(self.cap - 1, old - 1, -1))
+
+    def add(self, *, cid: int, version: int, seq: int, cycle: int,
+            duration: float, energy: float, fail_at: float, now: float,
+            payload, adversarial: bool) -> int:
+        if not self._free:
+            self._grow()
+        s = self._free.pop()
+        self.cid[s] = cid
+        self.version[s] = version
+        self.seq[s] = seq
+        self.cycle[s] = cycle
+        self.duration[s] = duration
+        self.energy[s] = energy
+        self.fail_at[s] = fail_at
+        self.end_active[s] = min(duration, fail_at)
+        self.done_active[s] = 0.0
+        self.online_since[s] = now       # dispatch requires an online device
+        self.dispatched_at[s] = now
+        self.is_upload[s] = payload[0] is not None
+        self.adversarial[s] = adversarial
+        self.active[s] = True
+        self.payload[s] = payload
+        self._n += 1
+        return s
+
+    def free(self, slot: int) -> None:
+        self.active[slot] = False
+        self.payload.pop(slot, None)
+        self._free.append(slot)
+        self._n -= 1
+
+    def end_abs(self) -> np.ndarray:
+        """(cap,) absolute completion/dropout time per slot; ``+inf`` for
+        free slots and jobs paused over an availability gap."""
+        out = np.full(self.cap, np.inf)
+        run = self.active & ~np.isnan(self.online_since)
+        out[run] = (self.online_since[run]
+                    + (self.end_active[run] - self.done_active[run]))
+        return out
+
+    def apply_mask(self, mask: np.ndarray, t: float) -> None:
+        """Pause/resume bookkeeping at an availability-mask change at
+        absolute time ``t``: newly offline jobs bank their active seconds,
+        newly online jobs restart their stretch."""
+        act = np.flatnonzero(self.active)
+        if act.size == 0:
+            return
+        online = mask[self.cid[act]]
+        running = ~np.isnan(self.online_since[act])
+        pause = act[running & ~online]
+        if pause.size:
+            self.done_active[pause] += t - self.online_since[pause]
+            self.online_since[pause] = np.nan
+        resume = act[~running & online]
+        if resume.size:
+            self.online_since[resume] = t
+
+
 class AsyncRoundEngine:
     """Event loop driving one :class:`~repro.fl.server.FLServer` in
     asynchronous mode.  Mutates the server's global model / bookkeeping and
     appends per-aggregation :class:`~repro.fl.server.RoundResult` records to
     ``server.history`` so every downstream consumer (benchmarks, ToA/EoA
-    reductions) reads async runs unchanged."""
+    reductions) reads async runs unchanged.
+
+    ``FLConfig.async_events`` picks the stepping mode: ``"batched"``
+    (default — whole event windows per step) or ``"sequential"`` (one
+    event instant per step — the slow parity oracle batched mode is
+    tested bit-for-bit against)."""
 
     def __init__(self, server, policy):
         from repro.fl.aggregation import STALENESS_KINDS
@@ -106,6 +247,11 @@ class AsyncRoundEngine:
         if cfg.staleness not in STALENESS_KINDS:
             raise ValueError(f"unknown staleness kind {cfg.staleness!r}; "
                              f"expected one of {STALENESS_KINDS}")
+        self.events_mode = cfg.async_events or "batched"
+        if self.events_mode not in EVENT_MODES:
+            raise ValueError(f"unknown async_events mode "
+                             f"{cfg.async_events!r}; expected one of "
+                             f"{EVENT_MODES}")
         est_t, _ = server._static_round_estimates()
         self.tick_s = cfg.async_tick_s or float(np.median(est_t))
 
@@ -113,9 +259,18 @@ class AsyncRoundEngine:
         self.version = 0
         self.cycle = 0
         self._seq = 0
-        self.jobs: Dict[int, AsyncJob] = {}
+        self.jobs = _JobTable()
         self.buffer: List[AsyncJob] = []
         self._time_offset = server._cum_time   # absolute clock across runs
+
+        # incremental dispatch bookkeeping (no per-wave list rebuilding):
+        # _busy marks devices holding ANY unfinished obligation (in-flight
+        # job, buffered-unmerged update, region/root delta entry);
+        # _upload_slots counts the outstanding upload-bound updates that
+        # hold a concurrency slot (in-flight upload jobs + every buffered
+        # tier), maintained at dispatch/dropout/merge
+        self._busy = np.zeros(cfg.n_devices, bool)
+        self._upload_slots = 0
 
         # scenario clock: pool round r maps to [r*tick, (r+1)*tick) relative
         # to the engine's start round
@@ -128,57 +283,65 @@ class AsyncRoundEngine:
         self._energy_since_agg = 0.0
         self._failed_since_agg: List[int] = []
         self._last_observe = (None, None, None)   # (ctx, probe_ids, states)
+        self._events_since_merge = 0
+        self._trans_since_merge = 0
 
     # ------------------------------------------------------------------
     # scenario clock
     # ------------------------------------------------------------------
-    def _sync_pool(self) -> None:
+    def _sync_pool(self) -> bool:
         """Lazily fast-forward the scenario dynamics to the virtual clock's
         current round (one round per ``tick_s``).  Load and availability
         only influence decisions made *at events* — job durations/energies
         are sampled at dispatch, the mask at dispatch and pause/resume time
         — so replaying the skipped rounds on demand keeps full dynamics
         fidelity (Markov load keeps stepping, flash crowds keep spiking)
-        while the clock still jumps straight between events."""
+        while the clock still jumps straight between events.
+
+        Returns whether the availability mask actually CHANGED, so callers
+        can skip pause/resume bookkeeping (and batched windows can keep
+        going) across the no-op transitions that conservative
+        ``next_transition`` hints produce."""
         r = self._start_round + int(self.now / self.tick_s + 1e-9)
-        if r > self.srv.pool.round_idx:
-            # loss freshness advances with the VIRTUAL clock, one unit per
-            # scenario round — not per dispatch wave (several waves can fire
-            # inside one round, and none at all across a charging gap), so
-            # ctx.loss_age means "scenario rounds since observed" in both
-            # regimes
-            self.srv.loss_age += r - self.srv.pool.round_idx
-            self.srv.pool.advance_to(r)
-            self._mask = self.srv.pool.available()
-            self._next_trans = self.srv.pool.next_transition()
+        if r <= self.srv.pool.round_idx:
+            return False
+        # loss freshness advances with the VIRTUAL clock, one unit per
+        # scenario round — not per dispatch wave (several waves can fire
+        # inside one round, and none at all across a charging gap), so
+        # ctx.loss_age means "scenario rounds since observed" in both
+        # regimes
+        self.srv.loss_age += r - self.srv.pool.round_idx
+        self.srv.pool.advance_to(r)
+        new_mask = self.srv.pool.available()
+        self._next_trans = self.srv.pool.next_transition()
+        self._trans_since_merge += 1
+        if np.array_equal(new_mask, self._mask):
+            return False                 # no-op transition: mask unchanged
+        self._mask = new_mask
+        return True
 
     # ------------------------------------------------------------------
     # dispatch
     # ------------------------------------------------------------------
     def _slots_used(self) -> int:
         """Outstanding *upload-bound* updates: in-flight training jobs plus
-        completed-but-unmerged buffer entries.  A concurrency slot is held
-        from dispatch until the update is MERGED (FedBuff's M outstanding
+        every completed-but-unmerged tier.  A concurrency slot is held from
+        dispatch until the update is MERGED (FedBuff's M outstanding
         clients) — which is also what makes the buffer_size=K reduction a
         true barrier (no mid-wave refill).  Probe-only scouts (1 epoch, no
         upload) keep their device busy but do NOT hold a slot."""
-        return (sum(1 for j in self.jobs.values() if j.params is not None)
-                + len(self.buffer))
+        return self._upload_slots
 
     def _idle_online(self) -> np.ndarray:
         """Devices that may start new work: online and not already busy
-        with an in-flight job or an unmerged buffered update."""
-        idle_online = self._mask.copy()
-        if self.jobs:
-            idle_online[list(self.jobs)] = False
-        if self.buffer:
-            idle_online[[j.cid for j in self.buffer]] = False
-        return idle_online
+        with an in-flight job or an unmerged update in any tier."""
+        return self._mask & ~self._busy
 
     def _dispatch(self) -> bool:
         """Run one selection wave if slots and online+idle devices exist."""
         srv, cfg = self.srv, self.srv.cfg
-        self._sync_pool()
+        if self._sync_pool():
+            self.jobs.apply_mask(self._mask, self.now)
         free = self.concurrency - self._slots_used()
         if free <= 0:
             return False
@@ -286,8 +449,12 @@ class AsyncRoundEngine:
                   + float(sys.e_comm[i])
                   + float(sys.e_comp[i]) * plan.completion_epochs)
             fail_at = float(srv.rng.random() * dur) if drop[j] else np.inf
+            # the final-epoch loss stays an unmaterialized device scalar
+            # until the completion EVENT lands (host/device overlap: the
+            # executor's async dispatch keeps running while the host
+            # reduces the next event window)
             loss_arr = losses.get(i, np.zeros(0))
-            loss = float(loss_arr[-1]) if len(loss_arr) else float(srv.last_loss[i])
+            loss = loss_arr[-1] if len(loss_arr) else float(srv.last_loss[i])
             self._add_job(i, duration=dur, energy=en, params=params[i],
                           loss=loss, fail_at=fail_at,
                           adversarial=bool(adv[j]))
@@ -300,13 +467,14 @@ class AsyncRoundEngine:
         return len(selected) > 0 or len(probe_ids) > 0
 
     def _add_job(self, cid: int, *, duration: float, energy: float, params,
-                 loss: float, fail_at: float,
-                 adversarial: bool = False) -> None:
-        self.jobs[cid] = AsyncJob(cid=cid, version=self.version,
-                                  seq=self._seq, cycle=self.cycle,
-                                  duration_s=max(duration, _EPS),
-                                  energy_j=energy, params=params, loss=loss,
-                                  fail_at_s=fail_at, adversarial=adversarial)
+                 loss, fail_at: float, adversarial: bool = False) -> None:
+        self.jobs.add(cid=cid, version=self.version, seq=self._seq,
+                      cycle=self.cycle, duration=max(duration, _EPS),
+                      energy=energy, fail_at=fail_at, now=self.now,
+                      payload=(params, loss), adversarial=adversarial)
+        self._busy[cid] = True
+        if params is not None:
+            self._upload_slots += 1
         self._seq += 1
 
     # ------------------------------------------------------------------
@@ -317,49 +485,170 @@ class AsyncRoundEngine:
             return None
         return (self._next_trans - self._start_round) * self.tick_s
 
-    def _next_event_dt(self) -> Optional[float]:
-        """Seconds until the next job completion/failure or availability
-        transition (None = no future event exists)."""
-        dts = [job.end_s - job.elapsed_s for job in self.jobs.values()
-               if self._mask[job.cid]]
-        t_trans = self._trans_time()
-        if t_trans is not None:
-            dts.append(t_trans - self.now)
-        if not dts:
-            return None
-        return max(min(dts), 0.0)
-
-    def _advance(self, dt: float) -> None:
-        self.now += dt
-        for job in self.jobs.values():
-            if self._mask[job.cid]:
-                job.elapsed_s += dt
-
-    def _process_events(self) -> None:
-        # availability transition: fast-forward the scenario dynamics and
-        # refresh the mask (paused jobs resume / running jobs pause for free)
-        self._sync_pool()
-
-        for job in [j for j in self.jobs.values()
-                    if j.elapsed_s >= j.end_s - _EPS]:
-            del self.jobs[job.cid]
-            cid = np.array([job.cid])
-            if job.fail_at_s < job.duration_s:        # mid-job dropout
-                frac = job.fail_at_s / job.duration_s
-                self._charge(job.energy_j * frac)
-                self._failed_since_agg.append(job.cid)
-                self.srv.telemetry.observe_dropouts(cid)
+    def _finish_group(self, slots: np.ndarray) -> None:
+        """Retire one batch of due jobs (same ``_EPS`` instant, already in
+        dispatch ``seq`` order): charge energy per job in order, free
+        devices/slots, then feed telemetry and the merge buffer with one
+        vectorized call per kind (per-device updates are independent and
+        every cid in a batch is unique — a device runs one job at a time —
+        so the batched feed is bit-identical to per-event calls)."""
+        jt, srv = self.jobs, self.srv
+        drop_cids: List[int] = []
+        comp: List[AsyncJob] = []
+        for slot in slots:
+            slot = int(slot)
+            cid = int(jt.cid[slot])
+            if jt.fail_at[slot] < jt.duration[slot]:  # mid-job dropout
+                frac = float(jt.fail_at[slot]) / float(jt.duration[slot])
+                self._charge(float(jt.energy[slot]) * frac)
+                self._failed_since_agg.append(cid)
+                drop_cids.append(cid)
+                if jt.is_upload[slot]:
+                    self._upload_slots -= 1
+                self._busy[cid] = False
+                jt.free(slot)
                 continue
-            self._charge(job.energy_j)
-            if job.params is None:                    # probe-only early exit
+            self._charge(float(jt.energy[slot]))
+            if not jt.is_upload[slot]:               # probe-only early exit
+                self._busy[cid] = False
+                jt.free(slot)
                 continue
+            # completions stay busy (and keep their slot) until MERGED
+            params, loss = jt.payload[slot]
+            comp.append(AsyncJob(
+                cid=cid, version=int(jt.version[slot]),
+                seq=int(jt.seq[slot]), cycle=int(jt.cycle[slot]),
+                duration_s=float(jt.duration[slot]),
+                energy_j=float(jt.energy[slot]), params=params,
+                loss=float(loss), fail_at_s=float(jt.fail_at[slot]),
+                dispatched_at=float(jt.dispatched_at[slot]),
+                adversarial=bool(jt.adversarial[slot])))
+            jt.free(slot)
+        if drop_cids:
+            srv.telemetry.observe_dropouts(np.asarray(drop_cids, np.int64))
+        if comp:
+            cids = np.asarray([j.cid for j in comp], np.int64)
             # active seconds only — pauses over availability gaps cost
             # wall-clock, not device time, so they don't skew the estimate
-            self.srv.telemetry.observe_completions(cid,
-                                                   np.array([job.duration_s]))
-            self.srv.last_loss[job.cid] = job.loss
-            self.srv.loss_age[job.cid] = 0
-            self.buffer.append(job)
+            srv.telemetry.observe_completions(
+                cids, np.asarray([j.duration_s for j in comp]))
+            srv.last_loss[cids] = [j.loss for j in comp]
+            srv.loss_age[cids] = 0
+            self.buffer.extend(comp)
+
+    def _due_order(self, slots: np.ndarray) -> np.ndarray:
+        """Due slots in the order the sequential loop retires them: the
+        whole batch shares one instant, ties resolved by dispatch seq."""
+        return slots[np.argsort(self.jobs.seq[slots], kind="stable")]
+
+    def _step(self) -> bool:
+        """Advance the clock past at least one event.  Returns False when
+        no future event exists (the stall condition)."""
+        if self.events_mode == "sequential":
+            return self._step_sequential()
+        return self._step_batched()
+
+    def _step_sequential(self) -> bool:
+        """Parity oracle: jump to the single next event instant and retire
+        its due set — one event batch per call, exactly the historical
+        loop but reading absolute times off the job table."""
+        end_abs = self.jobs.end_abs()
+        t_next = float(end_abs.min()) if len(self.jobs) else np.inf
+        t_trans = self._trans_time()
+        if t_trans is not None:
+            t_next = min(t_next, t_trans)
+        if not np.isfinite(t_next):
+            return False
+        self.now = max(t_next, self.now)
+        changed = self._sync_pool()
+        due = np.flatnonzero(self.jobs.active & (end_abs <= self.now + _EPS))
+        self._finish_group(self._due_order(due))
+        self._events_since_merge += max(len(due), 1)
+        if changed:
+            self.jobs.apply_mask(self._mask, self.now)
+        return True
+
+    def _fill_need(self) -> np.ndarray:
+        """Per merge-unit remaining completions before a threshold fills
+        (base engine: one unit, the buffer).  The batched window must stop
+        at the completion that fills a unit — the merge it triggers can
+        change the model version, dispatch eligibility and (for the
+        hierarchical engine) the fold order."""
+        return np.asarray([self.buffer_size - len(self.buffer)])
+
+    def _fill_unit_of(self, cids: np.ndarray) -> np.ndarray:
+        """Merge-unit index of each completing device (base: unit 0)."""
+        return np.zeros(len(cids), np.int64)
+
+    def _step_batched(self) -> bool:
+        """Advance one event WINDOW: every job event strictly before the
+        next interesting event — dropout / probe exit (frees a device or
+        slot), threshold-filling completion (triggers a merge), or
+        availability transition — plus the interesting event's own
+        ``_EPS`` instant, processed group by group in the oracle's order.
+        Between groups nothing observable to dispatch or merging changes
+        (that is what *interesting* means), so batching is exact; a mask
+        change ends the window early because it re-times every event."""
+        jt = self.jobs
+        end_abs = jt.end_abs()
+        t_trans = self._trans_time()
+        slots = np.flatnonzero(np.isfinite(end_abs))
+        if slots.size == 0 and t_trans is None:
+            return False
+        order = np.argsort(end_abs[slots], kind="stable")
+        slots = slots[order]
+        times = end_abs[slots]
+        if t_trans is not None:
+            # events inside the transition's instant batch with it, as in
+            # the sequential loop
+            ncap = int(np.searchsorted(times, t_trans + _EPS, side="right"))
+            slots, times = slots[:ncap], times[:ncap]
+
+        groups = event_groups(times)
+        need = self._fill_need()
+        filled = np.zeros_like(need)
+        stop_g = len(groups) - 1
+        interesting = False            # did a job event end the window?
+        for gi, (i, j) in enumerate(groups):
+            g = slots[i:j]
+            is_drop = jt.fail_at[g] < jt.duration[g]
+            is_probe = ~jt.is_upload[g]
+            if bool((is_drop | is_probe).any()):
+                stop_g, interesting = gi, True
+                break
+            units = self._fill_unit_of(jt.cid[g])
+            np.add.at(filled, units, 1)
+            if bool((filled >= need).any()):
+                stop_g, interesting = gi, True
+                break
+
+        hit_transition = False
+        for gi in range(stop_g + 1):
+            i, j = groups[gi]
+            g = self._due_order(slots[i:j])
+            self.now = max(float(times[i]), self.now)
+            changed = self._sync_pool()
+            self._finish_group(g)
+            self._events_since_merge += j - i
+            if changed:
+                # the mask change pauses/resumes jobs: every later event
+                # time may have moved, so the window is stale — apply the
+                # change and let the next step rebuild it
+                self.jobs.apply_mask(self._mask, self.now)
+                return True
+            if t_trans is not None and times[i] >= t_trans - _EPS:
+                hit_transition = True
+        # when no job event stops the window (an interesting event ends the
+        # step IMMEDIATELY — it may open a dispatch or merge opportunity at
+        # its own instant), the availability transition is the window's
+        # edge: jump to it (no-op transitions cost exactly this one cheap
+        # probe, fixing the zero-dt spin)
+        if not interesting and t_trans is not None and not hit_transition:
+            self.now = max(t_trans, self.now)
+            self._events_since_merge += 1
+            if self._sync_pool():
+                self.jobs.apply_mask(self._mask, self.now)
+        return True
 
     def _charge(self, joules: float) -> None:
         self._energy_since_agg += joules
@@ -390,6 +679,9 @@ class AsyncRoundEngine:
             robust=cfg.aggregator, trim=cfg.agg_trim, f=cfg.agg_f,
             m_select=cfg.agg_m or None)
         self.version += 1
+        for j in take:                   # merged: devices may work again
+            self._busy[j.cid] = False
+        self._upload_slots -= len(take)
 
         acc, test_loss = srv._evaluate()
         d_acc = acc - srv._last_acc
@@ -427,19 +719,31 @@ class AsyncRoundEngine:
         return result
 
     # ------------------------------------------------------------------
+    def _stall_limit(self) -> int:
+        """Events allowed between consecutive merges before the runaway
+        backstop trips.  Scales with fleet size (churn-heavy million-device
+        runs legitimately see many transitions and probe exits per merge)
+        and with the observed transition density: each availability
+        transition strictly advances the scenario round — that is real
+        progress, e.g. waiting out a week-long charging gap — so it extends
+        the allowance instead of consuming it."""
+        return (100_000 + 10 * self.srv.cfg.n_devices
+                + 1000 * self.buffer_size + 10 * self._trans_since_merge)
+
     def run(self, aggregations: int, verbose: bool = False):
         """Drive the event loop until ``aggregations`` buffer merges have
         been applied; returns the per-aggregation history slice."""
         srv = self.srv
         start = len(srv.history)
         done = 0
-        max_events = 1000 * aggregations + 100_000   # runaway-loop backstop
-        for _ in range(max_events):
+        while True:
             # 1. drain full buffers (a merge may free the model for the
             #    next wave, so this must precede dispatch)
             while done < aggregations and self._ready():
                 res = self._aggregate()
                 done += 1
+                self._events_since_merge = 0
+                self._trans_since_merge = 0
                 if verbose:
                     print(f"[{self.policy.name}] agg {res.round:3d} "
                           f"acc={res.acc:.4f} t={res.cum_time:9.1f}s "
@@ -452,16 +756,21 @@ class AsyncRoundEngine:
             #    several waves' worth of idle devices)
             if self._dispatch():
                 continue
-            # 3. otherwise jump the clock to the next event
-            dt = self._next_event_dt()
-            if dt is None:
+            # 3. otherwise jump the clock to the next event window
+            if not self._step():
                 raise RuntimeError(
                     "async engine stalled: no running jobs, no dispatchable "
                     "devices and no future availability transition "
-                    f"(t={self.now:.1f}s, {len(self.jobs)} paused jobs)")
-            self._advance(dt)
-            self._process_events()
-        else:
-            raise RuntimeError(f"async engine exceeded {max_events} events "
-                               f"after {done}/{aggregations} aggregations")
+                    f"(t={self.now:.1f}s, {len(self.jobs)} paused jobs, "
+                    f"{self._events_since_merge} events and "
+                    f"{self._trans_since_merge} transitions since the last "
+                    "merge)")
+            if self._events_since_merge > self._stall_limit():
+                raise RuntimeError(
+                    f"async engine exceeded {self._stall_limit()} events "
+                    "without an aggregation "
+                    f"({self._events_since_merge} events and "
+                    f"{self._trans_since_merge} transitions since the last "
+                    f"merge; {done}/{aggregations} aggregations, "
+                    f"t={self.now:.1f}s, {len(self.jobs)} jobs in flight)")
         return srv.history[start:]

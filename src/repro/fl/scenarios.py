@@ -169,6 +169,9 @@ class FlashCrowdLoad:
 class AlwaysAvailable:
     """Every device is online every round (the seed behavior)."""
 
+    # pure function of round_idx: DevicePool.advance_to may jump rounds
+    stateless_replay = True
+
     def init_state(self, n: int, rng: np.random.Generator):
         return np.ones(n, bool)
 
@@ -215,6 +218,9 @@ class DiurnalAvailability:
     period: int = 24
     duty: float = 0.4
     phase_spread: float = 0.15   # most users charge at a similar local hour
+
+    # step() keeps state verbatim and draws no RNG: replay can jump rounds
+    stateless_replay = True
 
     def init_state(self, n: int, rng: np.random.Generator):
         return rng.normal(0.0, self.phase_spread, size=n) % 1.0

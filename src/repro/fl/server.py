@@ -121,6 +121,10 @@ class FLConfig:
     staleness_b: int = 4          # hinge: lag tolerated before decay
     async_tick_s: float = 0.0     # seconds of virtual clock per scenario
     #                               round (0 => median static round latency)
+    async_events: str = "batched"  # event-loop stepping: "batched" (whole
+    #                               event windows per step) | "sequential"
+    #                               (one event instant per step — the slow
+    #                               parity oracle)
     topology: Any = None          # hierarchical aggregation topology
     #                               (repro.fl.topology): a registered name,
     #                               an AggregationTopology, or None — None

@@ -184,11 +184,19 @@ class DevicePool:
                                                    self.round_idx)
 
     def advance_to(self, round_idx: int) -> None:
-        """Fast-forward the dynamics to ``round_idx`` (replaying every
-        intermediate step so the stochastic models keep their per-round
-        semantics).  The async engine calls this at availability
-        *transitions* — :meth:`next_transition` tells it which rounds it can
-        skip over without the mask changing."""
+        """Fast-forward the dynamics to ``round_idx``.  Stochastic models
+        replay every intermediate step so their per-round RNG semantics are
+        preserved; models that declare ``stateless_replay`` (trace replay,
+        the deterministic diurnal/always patterns) are pure functions of
+        ``round_idx``, so the jump is a single assignment — bit-identical
+        and O(1) no matter how many rounds the async clock skips.  The
+        async engine calls this at availability *transitions* —
+        :meth:`next_transition` tells it which rounds it can skip over
+        without the mask changing."""
+        if (getattr(self.load_model, "stateless_replay", False)
+                and getattr(self.availability, "stateless_replay", False)):
+            self.round_idx = max(self.round_idx, round_idx)
+            return
         while self.round_idx < round_idx:
             self.advance_round()
 

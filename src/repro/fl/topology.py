@@ -642,28 +642,17 @@ class HierarchicalAsyncEngine(AsyncRoundEngine):
     # ------------------------------------------------------------------
     # dispatch: one wave per region, round-robin, capped at k_r
     # ------------------------------------------------------------------
-    def _busy_ids(self) -> List[int]:
-        ids = [j.cid for buf in self.region_buffers for j in buf]
-        for d in self.root_buffer:
-            ids.extend(int(i) for i in d.cids)
-        return ids
-
-    def _slots_used(self) -> int:
-        # updates keep their concurrency slot until the ROOT merges them
-        # (region-buffered jobs and folded-but-unmerged deltas included) —
-        # the same dispatch-until-merged semantics as the base engine
-        return super()._slots_used() + len(self._busy_ids())
-
-    def _idle_online(self) -> np.ndarray:
-        idle = super()._idle_online()
-        busy = self._busy_ids()
-        if busy:
-            idle[busy] = False
-        return idle
+    # NOTE: a device stays in the engine's incremental ``_busy`` mask and
+    # its update keeps a concurrency slot until the ROOT merges it —
+    # region-buffered jobs and folded-but-unmerged deltas included (the
+    # same dispatch-until-merged semantics as the base engine).  Both are
+    # maintained incrementally: set at dispatch, cleared in
+    # :meth:`_aggregate` below — no per-wave buffer scans.
 
     def _dispatch(self) -> bool:
         srv, cfg = self.srv, self.srv.cfg
-        self._sync_pool()
+        if self._sync_pool():
+            self.jobs.apply_mask(self._mask, self.now)
         free = self.concurrency - self._slots_used()
         if free <= 0:
             return False
@@ -688,6 +677,20 @@ class HierarchicalAsyncEngine(AsyncRoundEngine):
     # ------------------------------------------------------------------
     # merges: completed jobs -> region buffers -> edge deltas -> root
     # ------------------------------------------------------------------
+    def _fill_need(self) -> np.ndarray:
+        """Per-REGION completions remaining before an edge fold threshold
+        fills (the batched event window must stop there: a fold can reach
+        the root fan-in and trigger a merge).  Counts the not-yet-drained
+        base buffer toward its regions."""
+        fill = np.array([len(b) for b in self.region_buffers], np.int64)
+        if self.buffer:
+            np.add.at(fill, [int(self.region_labels[j.cid])
+                             for j in self.buffer], 1)
+        return np.asarray(self.region_buffer_size, np.int64) - fill
+
+    def _fill_unit_of(self, cids: np.ndarray) -> np.ndarray:
+        return np.asarray(self.region_labels[cids], np.int64)
+
     def _drain_to_regions(self) -> None:
         for job in self.buffer:
             self.region_buffers[int(self.region_labels[job.cid])].append(job)
@@ -761,6 +764,8 @@ class HierarchicalAsyncEngine(AsyncRoundEngine):
         total_lags = np.concatenate(
             [d.client_lags + rl for d, rl in zip(take, root_lags)])
         srv.telemetry.observe_staleness(cids, total_lags)
+        self._busy[cids] = False         # root-merged: devices may work again
+        self._upload_slots -= len(cids)
 
         acc, test_loss = srv._evaluate()
         d_acc = acc - srv._last_acc

@@ -28,6 +28,7 @@ caching) only when a fleet is built.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 from typing import Dict, Optional, Tuple
 
@@ -62,6 +63,10 @@ class TraceLoad:
     seconds_per_round: float = 3600.0
     loads_by_state: Tuple[float, ...] = DEFAULT_STATE_LOADS
 
+    # replay is a pure function of round_idx (no RNG, no mutable state),
+    # so DevicePool.advance_to may jump rounds without stepping through
+    stateless_replay = True
+
     def init_state(self, n: int, rng: np.random.Generator):
         _check_n(self.fleet, n)
         return None                        # replay is stateless (and RNG-free)
@@ -83,6 +88,13 @@ class TraceAvailability:
     fleet: ResampledFleet
     seconds_per_round: float = 3600.0
     online_states: Tuple[str, ...] = DEFAULT_ONLINE_STATES
+
+    # like TraceLoad: replay consumes no RNG and carries no mutable state
+    stateless_replay = True
+
+    # verified candidate rounds per next_transition call before falling
+    # back to a conservative hint (misaligned pathological traces only)
+    _max_verify = 64
 
     def _online_lut(self) -> np.ndarray:
         lut = np.zeros(len(STATE_NAMES), dtype=bool)
@@ -110,14 +122,54 @@ class TraceAvailability:
         never), from the compiled timelines — the contract the async
         engine's virtual clock jumps on.
 
-        The sampled mask at round ``r`` is the trace read at
-        ``r * seconds_per_round``; when the period is a whole number of
-        rounds the sample sequence repeats every ``rounds_per_period()``
-        rounds, so a full period with no change proves it never changes
-        (cf. :meth:`repro.fl.scenarios.DiurnalAvailability.next_transition`).
-        With a misaligned period the sampling phase drifts, so after a
-        changeless period we conservatively report the next round after the
-        scanned window instead of ``None``."""
+        Computed by candidate-and-verify over the fused
+        state+next-flip query (:meth:`ResampledFleet.states_and_next_flip`):
+        each device's next online-status flip bounds the first round its
+        sample can change; no device's sample moves before the fleet-wide
+        minimum candidate, so checking candidates in increasing order
+        finds the first actual change without scanning every round — the
+        old per-round scan (kept as :meth:`_next_transition_scan`, and
+        selectable via ``REPRO_TRACE_TRANSITION=scan``) cost
+        O(rounds_per_period * n) per call.
+
+        When the period is a whole number of rounds the sample sequence
+        repeats every ``rounds_per_period()`` rounds, so candidates past a
+        full changeless period prove ``None``.  With a misaligned period
+        the sampling phase drifts forever; after ``_max_verify``
+        changeless candidates we return the last verified round + 1 — a
+        sound conservative hint (the mask provably cannot change sooner),
+        which the async engine now skips cheaply when it turns out to be a
+        no-op."""
+        if os.environ.get("REPRO_TRACE_TRANSITION", "fused") == "scan":
+            return self._next_transition_scan(state, round_idx)
+        spr = self.seconds_per_round
+        fleet = self.fleet
+        lut = self._online_lut()
+        cur = self.mask(state, round_idx)
+        horizon = round_idx + self.rounds_per_period()
+        aligned = abs(fleet.trace.period_s % spr) < 1e-9
+        r = round_idx
+        for _ in range(self._max_verify):
+            _, flip_abs = fleet.states_and_next_flip(r * spr, lut)
+            # first round whose sample time reaches each device's flip;
+            # the -1e-9 slop only ever biases a candidate EARLY (it gets
+            # verified), never past a real change
+            cand = np.ceil((flip_abs - fleet.phase_s) / spr - 1e-9)
+            nxt = float(np.min(cand))        # inf segments never flip
+            if not np.isfinite(nxt):
+                return None                  # no device ever flips again
+            r_c = max(int(nxt), r + 1)
+            if aligned and r_c > horizon:
+                return None                  # full period, no sampled change
+            if not np.array_equal(self.mask(state, r_c), cur):
+                return r_c
+            r = r_c                          # flip sampled away; keep walking
+        return r + 1
+
+    def _next_transition_scan(self, state, round_idx: int) -> Optional[int]:
+        """Brute-force per-round scan — the pre-compiled-path oracle
+        :meth:`next_transition` is parity-tested against (and the
+        baseline mode of the async-step benchmark)."""
         R = self.rounds_per_period()
         cur = self.mask(state, round_idx)
         for r in range(round_idx + 1, round_idx + R + 1):

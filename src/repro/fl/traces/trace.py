@@ -80,6 +80,12 @@ class Trace:
     # one global searchsorted key per segment: device_index * period + t —
     # sorted by construction, what makes fleet-wide state lookup one call
     _seg_key: np.ndarray = field(repr=False, default=None)
+    # the same mapping unpacked (device index per segment) for the compiled
+    # lookup paths, which compare (device, time) without an f64 key
+    _seg_dev: np.ndarray = field(repr=False, default=None)
+    # per-online-LUT next-flip tables (see online_flip_tau), keyed by the
+    # LUT tuple; a mutable cache is fine on this eq=False value object
+    _flip_cache: dict = field(repr=False, default_factory=dict)
 
     def __post_init__(self):
         if self._seg_key is None:
@@ -87,6 +93,7 @@ class Trace:
                                    np.diff(self.offsets))
             object.__setattr__(self, "_seg_key",
                                dev_of_seg * self.period_s + self.t_start)
+            object.__setattr__(self, "_seg_dev", dev_of_seg)
 
     @property
     def n_devices(self) -> int:
@@ -112,11 +119,44 @@ class Trace:
     # ------------------------------------------------------------------
     def states_at(self, devices: np.ndarray, t_s: np.ndarray) -> np.ndarray:
         """State codes of source ``devices`` at trace times ``t_s`` (both
-        broadcastable to one shape) — one global searchsorted."""
-        tau = np.asarray(t_s, dtype=np.float64) % self.period_s
-        q = np.asarray(devices, dtype=np.int64) * self.period_s + tau
-        idx = np.searchsorted(self._seg_key, q, side="right") - 1
+        broadcastable to one shape) — one global segment lookup through
+        :func:`repro.kernels.fleet_state.ops.segment_index` (host
+        searchsorted on CPU, the fused Pallas/XLA count on TPU)."""
+        from repro.kernels.fleet_state.ops import segment_index
+        idx = segment_index(self._seg_key, self._seg_dev, self.t_start,
+                            self.period_s, devices, t_s)
         return self.state[idx]
+
+    def online_flip_tau(self, online_lut: np.ndarray) -> np.ndarray:
+        """Per-segment trace time of the device's next ONLINE-STATUS flip
+        under ``online_lut`` (bool per state code), ``inf`` where the
+        status never changes.  Times are in the segment's own period frame
+        and may exceed ``period_s`` (the flip wraps into the next period);
+        memoized per LUT — the table is what makes the fused
+        state+next-transition query one lookup instead of a period scan."""
+        lut = np.asarray(online_lut, dtype=bool)
+        key = tuple(lut.tolist())
+        hit = self._flip_cache.get(key)
+        if hit is not None:
+            return hit
+        flip = np.full(self.n_segments, np.inf)
+        for d in range(self.n_devices):
+            lo, hi = int(self.offsets[d]), int(self.offsets[d + 1])
+            onl = lut[self.state[lo:hi]]
+            if onl.all() or not onl.any():
+                continue                     # status constant: never flips
+            # double the period so "next change after segment k" never
+            # wraps out of range; change points are where consecutive
+            # segments differ in STATUS (states may differ yet both be
+            # online — those are not mask transitions)
+            onl2 = np.concatenate([onl, onl])
+            ts2 = np.concatenate([self.t_start[lo:hi],
+                                  self.t_start[lo:hi] + self.period_s])
+            change = np.flatnonzero(onl2[1:] != onl2[:-1]) + 1
+            pos = np.searchsorted(change, np.arange(hi - lo), side="right")
+            flip[lo:hi] = ts2[change[pos]]
+        self._flip_cache[key] = flip
+        return flip
 
     def resample(self, n: int, seed: int = 0,
                  phase_jitter_s: float = 1800.0) -> "ResampledFleet":
@@ -156,6 +196,19 @@ class ResampledFleet:
             self._memo[0] = t_s
             self._memo[1] = self.trace.states_at(self.src, t_s + self.phase_s)
         return self._memo[1]
+
+    def states_and_next_flip(self, t_s: float, online_lut: np.ndarray
+                             ) -> Tuple[np.ndarray, np.ndarray]:
+        """Fused query at trace time ``t_s``: (n,) state codes plus, per
+        device, the absolute phase-frame time (comparable with
+        ``t_s + phase_s``) of its next online-status flip under
+        ``online_lut`` (``inf`` = never) — one segment lookup for both,
+        the primitive ``TraceAvailability.next_transition`` jumps on."""
+        from repro.kernels.fleet_state.ops import fleet_state_at
+        tr = self.trace
+        return fleet_state_at(tr._seg_key, tr._seg_dev, tr.t_start, tr.state,
+                              tr.online_flip_tau(online_lut), tr.period_s,
+                              self.src, t_s + self.phase_s)
 
 
 # ---------------------------------------------------------------------------

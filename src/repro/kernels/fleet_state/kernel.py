@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: fleet state-at-time segment lookup as a masked count.
+
+The async engine's hot trace query — "which timeline segment is each of N
+fleet devices in at its (phase-shifted) query time" — is a batched binary
+search on host.  On TPU, per-query binary search needs a vector gather per
+probe step, which Mosaic does not lower; source traces are small (tens to
+a few hundred segments for the shipped fixtures), so the kernel instead
+ranks each query against ALL segments in one (block, S) compare-and-sum:
+``idx = #{s : dev[s] < src} + #{s : dev[s] == src and t[s] <= tau} - 1``.
+That is O(S) per query instead of O(log S), but it is pure VPU compare
+/reduce work with zero irregular memory traffic — the same trade the
+select_topk merge makes by replacing sort with knock-out max passes.
+
+Times arrive pre-split (int32 whole seconds + f32 fraction, compared
+lexicographically) so week-scale trace clocks never round through f32 —
+see :mod:`repro.kernels.fleet_state.ref`, the XLA oracle this kernel is
+parity-tested against.
+
+Grid: (N / block,).  Segment rows (1, S_pad) are replicated to every tile
+(S is small; they live in VMEM once); query rows (1, block) stream.
+Output: (1, block) int32 global segment indices.  Segment padding carries
+``dev = INT32_MAX`` so padded segments count for no query; query padding
+carries ``src = -1`` and returns -1, sliced off by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 512
+_INT32_MAX = 2**31 - 1
+
+
+def _kernel(dev_ref, ti_ref, tf_ref, src_ref, qi_ref, qf_ref, idx_ref):
+    dev = dev_ref[0, :][None, :]                     # (1, S)
+    ti = ti_ref[0, :][None, :]
+    tf = tf_ref[0, :][None, :]
+    src = src_ref[0, :][:, None]                     # (block, 1)
+    qi = qi_ref[0, :][:, None]
+    qf = qf_ref[0, :][:, None]
+    lt = dev < src
+    eq = dev == src
+    le_t = (ti < qi) | ((ti == qi) & (tf <= qf))
+    cnt = jnp.sum((lt | (eq & le_t)).astype(jnp.int32), axis=1)
+    idx_ref[0, :] = cnt - 1
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def segment_index_pallas(seg_dev: jnp.ndarray, seg_ti: jnp.ndarray,
+                         seg_tf: jnp.ndarray, src: jnp.ndarray,
+                         qi: jnp.ndarray, qf: jnp.ndarray, *,
+                         block: int = DEFAULT_BLOCK,
+                         interpret: bool = None) -> jnp.ndarray:
+    """(N,) int32 global segment indices; same contract as
+    :func:`repro.kernels.fleet_state.ref.segment_index_ref`.
+
+    ``interpret=None`` resolves to interpret mode off-TPU (the CPU/ref
+    fallback) and compiled mode on TPU.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n = src.shape[0]
+    s = seg_dev.shape[0]
+    s_pad = max(128, -(-s // 128) * 128)
+    block = min(block, max(128, -(-n // 128) * 128))
+    n_pad = -(-n // block) * block
+
+    seg_dev = jnp.pad(seg_dev.astype(jnp.int32), (0, s_pad - s),
+                      constant_values=_INT32_MAX)
+    seg_ti = jnp.pad(seg_ti.astype(jnp.int32), (0, s_pad - s))
+    seg_tf = jnp.pad(seg_tf.astype(jnp.float32), (0, s_pad - s))
+    src = jnp.pad(src.astype(jnp.int32), (0, n_pad - n), constant_values=-1)
+    qi = jnp.pad(qi.astype(jnp.int32), (0, n_pad - n))
+    qf = jnp.pad(qf.astype(jnp.float32), (0, n_pad - n))
+
+    seg_spec = pl.BlockSpec((1, s_pad), lambda t: (0, 0))
+    q_spec = pl.BlockSpec((1, block), lambda t: (0, t))
+
+    idx = pl.pallas_call(
+        _kernel,
+        grid=(n_pad // block,),
+        in_specs=[seg_spec, seg_spec, seg_spec, q_spec, q_spec, q_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((1, n_pad), jnp.int32),
+        interpret=interpret,
+    )(seg_dev.reshape(1, s_pad), seg_ti.reshape(1, s_pad),
+      seg_tf.reshape(1, s_pad), src.reshape(1, n_pad),
+      qi.reshape(1, n_pad), qf.reshape(1, n_pad))
+    return idx[0, :n]

@@ -1,0 +1,112 @@
+"""Public op: fused fleet "state-at-time + next-transition" trace lookup.
+
+``segment_index`` is THE segment lookup for compiled trace timelines —
+:meth:`repro.fl.traces.trace.Trace.states_at` routes through it, so every
+trace-driven mask/load query in the simulator hits one implementation
+with three interchangeable backends:
+
+* ``numpy`` — the original host path: one global f64 ``searchsorted``
+  over the precomputed ``device * period + t_start`` key.  Exact, fast on
+  CPU, the production path off-accelerator.
+* ``xla`` — the chunked compare-and-count oracle
+  (:mod:`repro.kernels.fleet_state.ref`), f64-free via int32+f32 split
+  times; what the kernel is parity-tested against.
+* ``pallas`` — the TPU kernel (:mod:`repro.kernels.fleet_state.kernel`),
+  same count in one (block, S) VPU pass per query tile.
+
+``impl="auto"`` picks ``pallas`` on TPU and ``numpy`` elsewhere; the
+``REPRO_FLEET_STATE_IMPL`` env var overrides the *auto* choice only (CI
+uses it to drive the interpret-mode kernel), mirroring
+``REPRO_SELECT_IMPL``.
+
+``fleet_state_at`` is the fused query the async virtual clock jumps on:
+one lookup returns both the state codes AND each device's next
+online-status flip time (via the per-segment ``flip_tau`` table that
+:meth:`repro.fl.traces.trace.Trace.online_flip_tau` precomputes), so
+"state now + when does the mask change next" costs a single pass instead
+of a per-round rescan.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def resolve_fleet_state_impl(impl: str = "auto") -> str:
+    """Map "auto" to the backend-appropriate implementation; the
+    ``REPRO_FLEET_STATE_IMPL`` env var (``numpy`` | ``xla`` | ``pallas``)
+    overrides the auto choice only."""
+    if impl == "auto":
+        impl = os.environ.get("REPRO_FLEET_STATE_IMPL", "auto")
+    if impl == "auto":
+        import jax
+        return "pallas" if jax.default_backend() == "tpu" else "numpy"
+    if impl not in ("numpy", "xla", "pallas"):
+        raise ValueError(f"unknown fleet-state impl {impl!r}")
+    return impl
+
+
+def _split_times(t: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact int32 whole-second + f32 fraction split of f64 trace times.
+
+    The compiled paths compare (int, frac) lexicographically, which is
+    exact for whole-second segment starts (what ``compile_events``
+    ingests) against arbitrarily fractional phase-jittered query times.
+    """
+    ti = np.floor(t)
+    return ti.astype(np.int32), (t - ti).astype(np.float32)
+
+
+def segment_index(seg_key: np.ndarray, seg_dev: np.ndarray,
+                  seg_t: np.ndarray, period_s: float,
+                  src: np.ndarray, t_s: np.ndarray, *,
+                  impl: str = "auto") -> np.ndarray:
+    """Global segment index of each ``(src, t_s)`` query (broadcastable);
+    times are wrapped into the period here, so callers pass absolute
+    phase-shifted clocks."""
+    tau = np.asarray(t_s, dtype=np.float64) % period_s
+    src = np.asarray(src, dtype=np.int64)
+    kind = resolve_fleet_state_impl(impl)
+    if kind == "numpy":
+        return np.searchsorted(seg_key, src * period_s + tau,
+                               side="right") - 1
+    src_b, tau_b = np.broadcast_arrays(src, tau)
+    shape = src_b.shape
+    sti, stf = _split_times(np.asarray(seg_t, np.float64))
+    qi, qf = _split_times(tau_b.reshape(-1))
+    sdev = np.asarray(seg_dev, np.int32)
+    srcq = src_b.reshape(-1).astype(np.int32)
+    if kind == "xla":
+        from repro.kernels.fleet_state.ref import segment_index_ref
+        idx = segment_index_ref(sdev, sti, stf, srcq, qi, qf)
+    else:
+        from repro.kernels.fleet_state.kernel import segment_index_pallas
+        idx = segment_index_pallas(sdev, sti, stf, srcq, qi, qf)
+    return np.asarray(idx, np.int64).reshape(shape)
+
+
+def fleet_state_at(seg_key: np.ndarray, seg_dev: np.ndarray,
+                   seg_t: np.ndarray, seg_state: np.ndarray,
+                   flip_tau: Optional[np.ndarray], period_s: float,
+                   src: np.ndarray, t_s: np.ndarray, *,
+                   impl: str = "auto") -> Tuple[np.ndarray, np.ndarray]:
+    """Fused state + next-flip query.
+
+    Returns ``(codes, next_flip_abs)``: per query the segment's state
+    code, and the absolute time (same clock as ``t_s``) of the device's
+    next online-status flip per the ``flip_tau`` table — ``inf`` where
+    the status never changes.  The f64 flip arithmetic stays on host (an
+    O(N) gather off the int32 indices), so round computations downstream
+    never lose whole-second exactness to f32.
+    """
+    t = np.asarray(t_s, dtype=np.float64)
+    idx = segment_index(seg_key, seg_dev, seg_t, period_s, src, t,
+                        impl=impl)
+    codes = np.asarray(seg_state)[idx]
+    if flip_tau is None:
+        return codes, np.full(idx.shape, np.inf)
+    tau = t % period_s
+    flip = np.asarray(flip_tau, np.float64)[idx]
+    return codes, np.where(np.isfinite(flip), (t - tau) + flip, np.inf)

@@ -1,0 +1,63 @@
+"""XLA oracle for the fleet state-at-time segment lookup.
+
+The compiled trace layer answers "which timeline segment is device ``d``
+in at time ``t``" with one global ``searchsorted`` over the CSR key array
+(:meth:`repro.fl.traces.trace.Trace.states_at`).  On accelerators f64 is
+unavailable, and rounding week-scale times to f32 (ulp ~0.06 s at 6e5 s)
+would move segment boundaries.  Both compiled implementations therefore
+take the query and segment times PRE-SPLIT into an exact int32 whole
+-second part plus an f32 sub-second fraction and compare
+lexicographically — exact for whole-second segment starts (what
+``compile_events`` produces from LiveLab-style logs) no matter how
+fractional the phase-jittered query times are.
+
+The segment index of query ``(src, tau)`` is a rank over the flat segment
+arrays: ``#{s : dev[s] < src} + #{s : dev[s] == src and t[s] <= tau} - 1``
+— a masked count, not a gather, which is the shape that lowers cleanly to
+the TPU vector unit (cf. the knock-out merge in ``select_topk``).  This
+module is the chunked-``lax.map`` XLA form of that count: the oracle the
+Pallas kernel (:mod:`repro.kernels.fleet_state.kernel`) is parity-tested
+against, bit-identical by construction since both run the same compare.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# queries per lax.map chunk: bounds the (chunk, S) compare broadcast so a
+# 1M-device query never materializes an (N, S) boolean sea
+CHUNK = 4096
+
+
+def _count_chunk(seg_dev, seg_ti, seg_tf, src, qi, qf):
+    """(chunk,) segment index for one query chunk via the masked count."""
+    lt = seg_dev[None, :] < src[:, None]
+    eq = seg_dev[None, :] == src[:, None]
+    le_t = (seg_ti[None, :] < qi[:, None]) | (
+        (seg_ti[None, :] == qi[:, None]) & (seg_tf[None, :] <= qf[:, None]))
+    return jnp.sum(lt | (eq & le_t), axis=1).astype(jnp.int32) - 1
+
+
+@jax.jit
+def segment_index_ref(seg_dev: jnp.ndarray, seg_ti: jnp.ndarray,
+                      seg_tf: jnp.ndarray, src: jnp.ndarray,
+                      qi: jnp.ndarray, qf: jnp.ndarray) -> jnp.ndarray:
+    """Global segment index of each query — XLA oracle.
+
+    ``seg_dev``/``seg_ti`` int32 and ``seg_tf`` f32 describe the flat
+    segment array (device index, whole seconds, sub-second fraction of
+    each segment start, CSR order); ``src``/``qi``/``qf`` are the per
+    -query device index and split trace time.  Returns (N,) int32.
+    """
+    n = src.shape[0]
+    pad = -n % CHUNK
+    if pad:
+        # padded queries hit device -1 -> count 0 -> index -1, sliced off
+        src = jnp.pad(src, (0, pad), constant_values=-1)
+        qi = jnp.pad(qi, (0, pad))
+        qf = jnp.pad(qf, (0, pad))
+    chunks = jax.lax.map(
+        lambda q: _count_chunk(seg_dev, seg_ti, seg_tf, *q),
+        (src.reshape(-1, CHUNK), qi.reshape(-1, CHUNK),
+         qf.reshape(-1, CHUNK)))
+    return chunks.reshape(-1)[:n]

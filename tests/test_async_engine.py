@@ -276,3 +276,181 @@ def test_round_result_async_fields_default_for_sync(mlp_task, fl_data):
     res = srv.run_round(build_policy("fedavg"))
     assert res.mean_staleness == 0.0 and res.max_staleness == 0
     assert res.n_pending == 0
+
+
+# ---------------------------------------------------------------------------
+# batched event loop: oracle parity + event-window algebra
+# ---------------------------------------------------------------------------
+
+
+def _history_digest(srv):
+    return [(r.round, sorted(int(i) for i in r.selected),
+             sorted(int(i) for i in r.failed), r.acc, r.test_loss, r.r_t,
+             r.cum_time, r.cum_energy, r.mean_staleness, r.max_staleness,
+             r.n_available, dict(r.tier_staleness)) for r in srv.history]
+
+
+def _run_events_mode(events_mode, scenario, policy_name, mlp_task, fl_data):
+    cfg = FLConfig(n_devices=20, k_select=3, rounds=4, l_ep=2, lr=0.1,
+                   seed=7, scenario=scenario, mode="async",
+                   async_concurrency=6, staleness="polynomial",
+                   async_events=events_mode)
+    srv = FLServer(cfg, mlp_task, fl_data)
+    pol_kw = {"k": 3, "seed": 7} if policy_name == "fedrank" else {}
+    srv.run(build_policy(policy_name, **pol_kw))
+    return srv
+
+
+@pytest.mark.parametrize("scenario,policy", [
+    ("high-churn", "fedavg"),         # churny mask + mid-job dropouts
+    ("high-churn", "fedrank"),        # probe-only jobs + learning policy
+    ("nightly-chargers", "fedavg"),   # pause/resume over charging gaps
+    ("trace-synthetic-week", "fedavg"),  # trace replay + no-op transitions
+    ("hierarchical", "fedavg"),       # region folds + root fan-in
+], ids=lambda v: v if isinstance(v, str) else None)
+def test_batched_events_bit_identical_to_sequential_oracle(
+        scenario, policy, mlp_task, fl_data):
+    """The tentpole parity contract: the batched event loop replays the
+    one-event-at-a-time oracle bit-for-bit — every merge's cohort, clock,
+    energy, staleness, availability count, per-tier lags and the global
+    model itself."""
+    srv_seq = _run_events_mode("sequential", scenario, policy,
+                               mlp_task, fl_data)
+    srv_bat = _run_events_mode("batched", scenario, policy,
+                               mlp_task, fl_data)
+    assert _history_digest(srv_seq) == _history_digest(srv_bat)
+    for a, b in zip(jax.tree.leaves(srv_seq.global_params),
+                    jax.tree.leaves(srv_bat.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(srv_seq.last_loss, srv_bat.last_loss)
+    np.testing.assert_array_equal(srv_seq.loss_age, srv_bat.loss_age)
+
+
+def test_unknown_async_events_mode_raises(mlp_task, fl_data):
+    cfg = FLConfig(n_devices=20, k_select=3, rounds=1, l_ep=1, seed=0,
+                   mode="async", async_events="bogus")
+    srv = FLServer(cfg, mlp_task, fl_data)
+    with pytest.raises(ValueError, match="async_events"):
+        srv.run(build_policy("fedavg"))
+
+
+def test_event_groups_match_sequential_stepping():
+    """Property: ``event_groups`` over sorted times equals the sequential
+    loop's grouping rule — jump to the minimum remaining time, retire
+    everything within ``eps`` of it, repeat.  Exercised under quantized tie
+    times (many events sharing an instant exactly or to within sub-eps
+    jitter), the regime where per-event ``elapsed += dt`` accumulation used
+    to make batching order-unstable."""
+    from repro.fl.async_engine import event_groups
+
+    rng = np.random.default_rng(0)
+    eps = 1e-9
+    for case in range(200):
+        n = int(rng.integers(1, 40))
+        # quantized base times force heavy ties; half the cases add
+        # sub-eps jitter so groups span several distinct floats
+        times = rng.integers(0, 8, size=n) * 0.5
+        if case % 2:
+            times = times + rng.random(n) * 0.4 * eps
+        times = np.sort(times)
+
+        oracle = []
+        remaining = list(times)
+        while remaining:
+            t0 = remaining[0]
+            take = [t for t in remaining if t <= t0 + eps]
+            oracle.append(len(take))
+            remaining = remaining[len(take):]
+
+        got = event_groups(times, eps)
+        assert [j - i for i, j in got] == oracle
+        assert [i for i, _ in got] == list(np.cumsum([0] + oracle[:-1]))
+
+
+def test_batched_windows_preserve_seq_merge_order():
+    """Property: processing a window group-by-group with dispatch-``seq``
+    order inside each group yields exactly the retirement order of the
+    sequential oracle (which retires each instant's due set in ``seq``
+    order) — even when a group spans several distinct tie times whose
+    time-order disagrees with ``seq`` order."""
+    from repro.fl.async_engine import event_groups
+
+    rng = np.random.default_rng(1)
+    eps = 1e-9
+    for _ in range(200):
+        n = int(rng.integers(1, 50))
+        times = np.sort(rng.integers(0, 6, size=n) * 1.0
+                        + rng.random(n) * 0.9 * eps)
+        seqs = rng.permutation(n)
+
+        oracle = []
+        left = list(range(n))
+        while left:
+            t0 = times[left[0]]
+            due = [i for i in left if times[i] <= t0 + eps]
+            oracle.extend(sorted(due, key=lambda i: seqs[i]))
+            left = [i for i in left if i not in due]
+
+        batched = []
+        for i, j in event_groups(times, eps):
+            grp = np.arange(i, j)
+            batched.extend(grp[np.argsort(seqs[grp], kind="stable")])
+        assert batched == oracle
+
+
+def test_job_table_absolute_times_are_drift_free():
+    """The clock-drift bugfix: a job's completion time is derived from its
+    absolute dispatch/resume timestamps, so retiring unrelated events (any
+    number of them) leaves it EXACTLY unchanged, and a pause/resume cycle
+    re-derives it from the resume instant instead of accumulating
+    per-event ``+= dt`` error."""
+    from repro.fl.async_engine import _JobTable
+
+    jt = _JobTable(capacity=2)
+    slot = jt.add(cid=0, version=0, seq=0, cycle=0, duration=10.0,
+                  energy=1.0, fail_at=np.inf, now=0.3,
+                  payload=(None, 0.0), adversarial=False)
+    end0 = jt.end_abs()[slot]
+    assert end0 == 0.3 + 10.0
+
+    # unrelated events: other jobs come and go; this job's end is untouched
+    for k in range(1, 400):
+        t = 0.3 + k * 0.017
+        other = jt.add(cid=1, version=0, seq=k, cycle=0, duration=0.01,
+                       energy=0.0, fail_at=np.inf, now=t,
+                       payload=(None, 0.0), adversarial=False)
+        jt.free(other)
+        assert jt.end_abs()[slot] == end0
+
+    # pause at t=4.0 (3.7s of active work banked), resume at t=9.0:
+    # the new end is an exact absolute-arithmetic expression
+    mask = np.array([False, True])
+    jt.apply_mask(mask, 4.0)
+    assert jt.end_abs()[slot] == np.inf          # paused: no event
+    jt.apply_mask(np.array([True, True]), 9.0)
+    assert jt.end_abs()[slot] == 9.0 + (10.0 - (4.0 - 0.3))
+
+
+def test_batched_mode_takes_fewer_steps(mlp_task, fl_data):
+    """The point of the tentpole: one batched window replaces many
+    single-event steps on event-dense runs."""
+    from repro.fl.async_engine import AsyncRoundEngine
+
+    counts = {}
+    for mode in ("sequential", "batched"):
+        cfg = FLConfig(n_devices=20, k_select=3, rounds=4, l_ep=2, lr=0.1,
+                       seed=7, scenario="nightly-chargers", mode="async",
+                       async_concurrency=6, staleness="polynomial",
+                       async_events=mode)
+        srv = FLServer(cfg, mlp_task, fl_data)
+        eng = AsyncRoundEngine(srv, build_policy("fedavg"))
+        n_steps = 0
+        orig = eng._step
+        def counted(orig=orig):
+            nonlocal n_steps
+            n_steps += 1
+            return orig()
+        eng._step = counted
+        eng.run(cfg.rounds)
+        counts[mode] = n_steps
+    assert counts["batched"] < counts["sequential"]

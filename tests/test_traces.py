@@ -226,10 +226,13 @@ def test_next_transition_never_changes():
     tr = compile_events({"a": [(0.0, STATE_CODES["idle"])]}, DAY)
     avail = TraceAvailability(tr.resample(8, seed=0, phase_jitter_s=0.0))
     assert avail.next_transition(None, 0) is None
-    # misaligned period: can't prove periodicity => conservative hint
+    # misaligned period: the per-round scan can't prove periodicity, so it
+    # reports a conservative hint — but the fused flip-time path sees that
+    # no online-status flip exists at all and proves None exactly
     avail2 = TraceAvailability(tr.resample(8, seed=0, phase_jitter_s=0.0),
                                seconds_per_round=7000.0)
-    nxt = avail2.next_transition(None, 0)
+    assert avail2.next_transition(None, 0) is None
+    nxt = avail2._next_transition_scan(None, 0)
     assert nxt is not None and nxt > avail2.rounds_per_period()
 
 

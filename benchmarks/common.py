@@ -19,7 +19,8 @@ def build_env(n_devices: int = 40, k: int = 5, rounds: int = 25, l_ep: int = 3,
               mode: str = "sync", async_concurrency: int = 0,
               staleness: str = "constant", buffer_size: int = 0,
               feature_set: str = "paper6", aggregator: str = "mean",
-              agg_trim: int = 1, agg_f: int = 1, agg_m: int = 0):
+              agg_trim: int = 1, agg_f: int = 1, agg_m: int = 0,
+              observe=None):
     """Returns (make_server, task, data). sigma=None -> IID.  ``scenario``
     names the fleet environment (see repro.fl.scenarios); ``mode="async"``
     selects the buffered asynchronous engine (repro.fl.async_engine) with
@@ -27,7 +28,9 @@ def build_env(n_devices: int = 40, k: int = 5, rounds: int = 25, l_ep: int = 3,
     ``RoundContext.probe_states`` (repro.core.features); ``aggregator``
     picks the (robust) merge with its trim/f/m_select knobs
     (repro.fl.aggregation) — the adversarial-scenario sweeps pair it with
-    the attack scenarios of repro.fl.attacks."""
+    the attack scenarios of repro.fl.attacks; ``observe`` is the
+    ``FLConfig.observe`` recorder spec (``make_server`` accepts a per-run
+    override, so sweep drivers can trace each run to its own directory)."""
     train, test = make_classification_data(n_samples=n_samples, seed=seed)
     if sigma is None:
         parts = iid_partition(len(train.y), n_devices, seed=seed, size_skew=0.8)
@@ -36,7 +39,7 @@ def build_env(n_devices: int = 40, k: int = 5, rounds: int = 25, l_ep: int = 3,
     data = FederatedData(train, test, parts)
     task = MLPTask(dim=32, hidden=64, n_classes=10)
 
-    def make_server(run_seed: int = 1) -> FLServer:
+    def make_server(run_seed: int = 1, observe=observe) -> FLServer:
         cfg = FLConfig(n_devices=n_devices, k_select=k, rounds=rounds,
                        l_ep=l_ep, lr=0.1, seed=run_seed, prox_mu=prox_mu,
                        alpha=alpha, beta=beta, executor=executor,
@@ -44,7 +47,8 @@ def build_env(n_devices: int = 40, k: int = 5, rounds: int = 25, l_ep: int = 3,
                        async_concurrency=async_concurrency,
                        staleness=staleness, buffer_size=buffer_size,
                        feature_set=feature_set, aggregator=aggregator,
-                       agg_trim=agg_trim, agg_f=agg_f, agg_m=agg_m)
+                       agg_trim=agg_trim, agg_f=agg_f, agg_m=agg_m,
+                       observe=observe)
         return FLServer(cfg, task, data)
 
     return make_server, task, data

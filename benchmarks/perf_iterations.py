@@ -647,9 +647,16 @@ def main() -> None:
             results += run_region_exec_bench()
             results += run_selection_bench()
         results += run_async_step_bench(quick=args.quick)
+        from repro.obs import run_manifest
+
         os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
         with open(out, "w") as f:
-            json.dump(results, f, indent=1)
+            # rows are wall-clock timings: the manifest (platform, package
+            # versions, backend) is what makes them comparable across runs
+            json.dump({"manifest": run_manifest(
+                           extra={"driver": "perf_iterations",
+                                  "quick": args.quick}),
+                       "rows": results}, f, indent=1)
         return
     if args.fl_executors:
         out = args.out or "results/fl_executors.json"

@@ -42,6 +42,7 @@ from typing import Dict, List, Optional, Sequence
 
 from benchmarks.common import build_env, emit_csv
 from repro.fl import available_scenarios, build_policy, get_scenario
+from repro.obs import config_digest, run_manifest
 
 QUICK_SCENARIOS = ("uniform", "high-churn", "stragglers")
 QUICK_ASYNC_SCENARIOS = ("uniform", "high-churn")
@@ -82,7 +83,8 @@ def run(scenarios: Optional[Sequence[str]] = None,
         policies: Optional[Sequence[str]] = None,
         modes: Optional[Sequence[str]] = None,
         rounds: int = 25, k: int = 5, n_devices: int = 40, seed: int = 0,
-        quick: bool = False, verbose: bool = True) -> List[Dict]:
+        quick: bool = False, verbose: bool = True,
+        observe: Optional[str] = None) -> List[Dict]:
     explicit_scenarios = scenarios is not None
     if quick:
         rounds, k, n_devices = 2, 3, 16
@@ -125,7 +127,16 @@ def run(scenarios: Optional[Sequence[str]] = None,
                 for name in policies:
                     kw = {"qnet": q, "k": k, "seed": seed} \
                         if name == "fedrank" else {}
-                    srv = make_server(5)
+                    # --observe DIR: each run gets its own tagged run
+                    # record (manifest.json + run.jsonl under DIR); the
+                    # row's config_digest below joins it back to this row
+                    run_dir = None
+                    if observe:
+                        tag = f"{scenario}-{mode}-{name}"
+                        if aggregator != "mean":
+                            tag += f"-{aggregator}"
+                        run_dir = os.path.join(observe, tag)
+                    srv = make_server(5, observe=run_dir)
                     hist = srv.run(build_policy(name, **kw))
                     trajectory = [{
                         "round": r.round,
@@ -153,6 +164,9 @@ def run(scenarios: Optional[Sequence[str]] = None,
                         "mode": mode,
                         "policy": name,
                         "aggregator": aggregator,
+                        # join key to run records / manifests produced from
+                        # the same FLConfig (repro.obs.manifest)
+                        "config_digest": config_digest(srv.cfg),
                         "attack_fraction": attack_fraction,
                         "final_acc": round(hist[-1].acc, 4),
                         "cum_time_s": round(hist[-1].cum_time, 1),
@@ -189,10 +203,14 @@ def main() -> None:
                          "new (scenario, mode, policy, aggregator) keys, "
                          "keep the rest — so an adversarial-only sweep "
                          "doesn't discard the benign rows")
+    ap.add_argument("--observe", default=None, metavar="DIR",
+                    help="write one observability run record per run "
+                         "(manifest.json + run.jsonl, see repro.obs) under "
+                         "DIR/<scenario>-<mode>-<policy>[-<aggregator>]")
     args = ap.parse_args()
 
     rows = run(scenarios=args.scenarios, modes=args.modes,
-               rounds=args.rounds, quick=args.quick)
+               rounds=args.rounds, quick=args.quick, observe=args.observe)
     if args.merge and os.path.exists(args.out):
         with open(args.out) as f:
             old = json.load(f)
@@ -205,7 +223,12 @@ def main() -> None:
     out_dir = os.path.dirname(os.path.abspath(args.out))
     os.makedirs(out_dir, exist_ok=True)
     with open(args.out, "w") as f:
-        json.dump({"quick": args.quick, "results": rows}, f, indent=1)
+        # the manifest stamps what produced these rows (platform, package
+        # versions); per-row config_digest keys match per-run manifests
+        json.dump({"quick": args.quick,
+                   "manifest": run_manifest(
+                       extra={"driver": "robustness_failures"}),
+                   "results": rows}, f, indent=1)
     print(f"wrote {args.out} ({len(rows)} runs)")
     emit_csv(rows, ["scenario", "mode", "policy", "aggregator",
                     "attack_fraction", "final_acc", "cum_time_s",

@@ -23,7 +23,7 @@ from repro.fl.attacks import (
 )
 from repro.fl.server import FLServer, FLConfig, RoundResult
 from repro.fl.telemetry import TELEMETRY_FEATURES, DeviceTelemetry
-from repro.fl.async_engine import AsyncJob, AsyncRoundEngine
+from repro.fl.async_engine import AsyncJob, AsyncRoundEngine, AsyncStallError
 from repro.fl.engine import (
     AsyncDispatchExecutor,
     ClientExecutor,
@@ -35,6 +35,7 @@ from repro.fl.engine import (
     available_executors,
     build_requests,
     build_round_plan,
+    executor_label,
     make_executor,
     register_executor,
 )

@@ -49,6 +49,7 @@ from repro.fl.client import (
     local_train,
     make_parallel_local_train,
 )
+from repro.obs.profiling import timed_call
 
 Params = Any
 
@@ -160,6 +161,19 @@ class ClientExecutor(Protocol):
             batch_size: int, prox_mu: float) -> ExecutionResult: ...
 
 
+def executor_label(ex) -> str:
+    """The executor actually doing the work, wrappers unwrapped: registry
+    ``name`` with any ``inner`` delegate in brackets — e.g. the ``"async"``
+    alias around a vmapped executor reports ``"async[vmapped]"``.  This is
+    what :class:`~repro.fl.server.RoundResult.executor` records, so
+    benchmark reductions stop re-deriving it from config strings."""
+    name = getattr(ex, "name", type(ex).__name__)
+    inner = getattr(ex, "inner", None)
+    if inner is not None:
+        return f"{name}[{executor_label(inner)}]"
+    return name
+
+
 class SequentialExecutor:
     """Reference semantics: one ``local_train`` call per client, in order."""
 
@@ -264,8 +278,12 @@ class VmappedExecutor:
         step = _bucket_step(task, bs, nb, epochs, float(prox_mu), stacked_init)
         xs, ys, masks, perms = self._shard((xs, ys, masks, perms))
         p0 = self._shard_params(p0, stacked_init)
-        stacked, ep_losses = step(p0, xs, ys, masks,
-                                  jnp.asarray(lr, jnp.float32), perms)
+        # timed_call is a passthrough unless a profiler is active
+        # (repro.obs.profiling), in which case the jitted bucket step is
+        # fenced and charged per (cohort-size, epochs) geometry
+        stacked, ep_losses = timed_call(
+            f"vmapped.bucket_step[k={len(reqs)},ep={epochs}]",
+            step, p0, xs, ys, masks, jnp.asarray(lr, jnp.float32), perms)
         # one device->host transfer per leaf, then cheap numpy views per
         # client — slicing on device would cost K x leaves dispatches
         stacked = jax.tree.map(np.asarray, stacked)

@@ -43,6 +43,7 @@ with the absolute virtual clock as ``cum_time``.
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Protocol, Sequence
 
@@ -59,9 +60,12 @@ from repro.fl.engine import (
     ClientRequest,
     build_requests,
     build_round_plan,
+    executor_label,
     make_executor,
 )
 from repro.fl.scenarios import build_scenario
+from repro.obs import NULL_RECORDER, StructuredLogger, make_recorder
+from repro.obs import profiling as _profiling
 from repro.fl.simulation import (
     DevicePool,
     RoundSystemState,
@@ -154,6 +158,16 @@ class FLConfig:
     agg_trim: int = 1             # trimmed_mean: values cut per side/coord
     agg_f: int = 1                # krum/multi_krum: tolerated adversaries
     agg_m: int = 0                # multi_krum: updates kept (0 => m - f)
+    observe: Any = None           # structured observability (repro.obs):
+    #                               None/False = the zero-overhead no-op
+    #                               recorder (default — RNG-free, golden
+    #                               digests byte-identical), True = record
+    #                               spans/metrics in memory, a directory
+    #                               path = also write manifest.json +
+    #                               run.jsonl there, or a recorder instance
+    log_level: str = ""           # structured-log threshold (repro.obs.log):
+    #                               debug | info | warning | error
+    #                               ("" => $REPRO_LOG_LEVEL => warning)
     seed: int = 0
 
 
@@ -267,6 +281,16 @@ class RoundResult:
     #                             whose staleness weights COMPOSE into each
     #                             update's effective coefficient (see
     #                             repro.fl.aggregation.compose_staleness)
+    # --- run-reporting fields (always populated; excluded from golden
+    #     digests, which key on the numeric trajectory only) ---
+    host_time_s: float = 0.0      # host wall-clock seconds spent producing
+    #                             this record (sync: the whole round; async:
+    #                             since the previous aggregation) — set
+    #                             after policy feedback, so benchmark
+    #                             reductions stop re-timing srv.run()
+    executor: str = ""            # executor actually used, wrappers
+    #                             unwrapped (repro.fl.engine.executor_label,
+    #                             e.g. "async[vmapped]")
 
 
 def paper_reward(d_acc: float, r_t: float, r_e: float, t_budget: float,
@@ -359,6 +383,15 @@ class FLServer:
         est_t, est_e = self._static_round_estimates()
         self.t_budget = cfg.t_budget or float(np.median(est_t))
         self.e_budget = cfg.e_budget or float(np.median(est_e)) * cfg.k_select
+        # observability (repro.obs): created after the init-time evaluate so
+        # round 0's record starts clean; an enabled recorder also becomes the
+        # active profiler destination for kernel/executor op timings
+        self.obs = make_recorder(cfg.observe, cfg=cfg, scenario=cfg.scenario)
+        self.log = StructuredLogger(level=cfg.log_level or None,
+                                    recorder=self.obs)
+        self._executor_label = executor_label(self.executor)
+        if self.obs.enabled:
+            _profiling.set_profiler(self.obs)
 
     # ------------------------------------------------------------------
     @property
@@ -383,11 +416,13 @@ class FLServer:
         te = self.data.test
         bs = 512
         accs, losses, n = [], [], 0
-        for i in range(0, len(te.y), bs):
-            b = {"x": jnp.asarray(te.x[i:i + bs]), "y": jnp.asarray(te.y[i:i + bs])}
-            accs.append(float(self._eval_fn(self.global_params, b)) * len(b["y"]))
-            losses.append(float(self._loss_fn(self.global_params, b)) * len(b["y"]))
-            n += len(b["y"])
+        # getattr: __init__ evaluates once before the recorder exists
+        with getattr(self, "obs", NULL_RECORDER).span("evaluate"):
+            for i in range(0, len(te.y), bs):
+                b = {"x": jnp.asarray(te.x[i:i + bs]), "y": jnp.asarray(te.y[i:i + bs])}
+                accs.append(float(self._eval_fn(self.global_params, b)) * len(b["y"]))
+                losses.append(float(self._loss_fn(self.global_params, b)) * len(b["y"]))
+                n += len(b["y"])
         return sum(accs) / n, sum(losses) / n
 
     def _ctx(self, k: Optional[int] = None,
@@ -415,9 +450,20 @@ class FLServer:
         return self.data.train.x[idx], self.data.train.y[idx]
 
     def _execute(self, requests: Sequence[ClientRequest]):
-        return self.executor.run(self.task, self.global_params, requests,
-                                 lr=self.cfg.lr, batch_size=self.cfg.local_batch,
-                                 prox_mu=self.cfg.prox_mu)
+        if not self.obs.enabled:
+            return self.executor.run(self.task, self.global_params, requests,
+                                     lr=self.cfg.lr, batch_size=self.cfg.local_batch,
+                                     prox_mu=self.cfg.prox_mu)
+        # profiled path: fence the result so device work is charged to this
+        # executor call rather than the next host sync
+        t0 = time.perf_counter()
+        out = self.executor.run(self.task, self.global_params, requests,
+                                lr=self.cfg.lr, batch_size=self.cfg.local_batch,
+                                prox_mu=self.cfg.prox_mu)
+        jax.block_until_ready(out.params)
+        self.obs.record_op(f"executor.{self._executor_label}",
+                           time.perf_counter() - t0)
+        return out
 
     def _check_available(self, ctx: RoundContext, ids: np.ndarray,
                          policy: SelectionPolicy, stage: str) -> None:
@@ -435,71 +481,80 @@ class FLServer:
 
             return run_topology_round(self, policy)
         cfg = self.cfg
+        obs = self.obs
+        t_host0 = time.perf_counter()
         self.pool.advance_round()
         ctx = self._ctx()
         self.loss_age += 1
 
-        plan = build_round_plan(policy, ctx, cfg.l_ep)
+        with obs.span("plan"):
+            plan = build_round_plan(policy, ctx, cfg.l_ep)
         probe_ids = np.asarray(plan.probe_ids, dtype=np.int64)
         probe_states = None
         probe_params: Dict[int, Params] = {}
 
         # ---- probe stage ---------------------------------------------
         if plan.has_probe:
-            self._check_available(ctx, probe_ids, policy, "probed")
-            reqs = build_requests(probe_ids, self._client_data,
-                                  plan.probe_epochs, seed=cfg.seed,
-                                  round_idx=ctx.round,
-                                  stride=PROBE_SEED_STRIDE)
-            probed = self._execute(reqs)
-            probe_params = probed.params
-            probe_losses = np.array([probed.losses[int(i)][-1] for i in probe_ids])
-            self.last_loss[probe_ids] = probe_losses
-            self.loss_age[probe_ids] = 0
-            probe_states = ctx.probe_states(probe_ids, probe_losses)
+            with obs.span("probe"):
+                self._check_available(ctx, probe_ids, policy, "probed")
+                reqs = build_requests(probe_ids, self._client_data,
+                                      plan.probe_epochs, seed=cfg.seed,
+                                      round_idx=ctx.round,
+                                      stride=PROBE_SEED_STRIDE)
+                probed = self._execute(reqs)
+                probe_params = probed.params
+                probe_losses = np.array([probed.losses[int(i)][-1] for i in probe_ids])
+                self.last_loss[probe_ids] = probe_losses
+                self.loss_age[probe_ids] = 0
+                probe_states = ctx.probe_states(probe_ids, probe_losses)
 
-        # ---- select --------------------------------------------------
-        selected = np.asarray(policy.select(
-            ctx, probe_ids if plan.has_probe else None, probe_states),
-            dtype=np.int64)
-        self._check_available(ctx, selected, policy, "selected")
-        if plan.has_probe:
-            missing = [int(i) for i in selected if int(i) not in probe_params]
-            if missing:
-                raise ValueError(
-                    f"policy {policy.name!r} selected devices {missing} "
-                    "outside the round's probe set")
+        # ---- select (+ the scenario failure draw) --------------------
+        with obs.span("select"):
+            selected = np.asarray(policy.select(
+                ctx, probe_ids if plan.has_probe else None, probe_states),
+                dtype=np.int64)
+            self._check_available(ctx, selected, policy, "selected")
+            if plan.has_probe:
+                missing = [int(i) for i in selected if int(i) not in probe_params]
+                if missing:
+                    raise ValueError(
+                        f"policy {policy.name!r} selected devices {missing} "
+                        "outside the round's probe set")
 
-        # ---- failure injection (scenario's failure model) ------------
-        # Drawn before execution: who drops mid-round / misses the deadline
-        # is simulated, so the server never runs (or aggregates) their work.
-        completion_s = (ctx.sys.t_comm[selected]
-                        + ctx.sys.t_comp[selected] * plan.completion_epochs)
-        outcome = self.pool.draw_failures(self.rng, selected, completion_s)
-        lost = set(int(i) for i in outcome.lost)
-        survivors = np.asarray([i for i in selected if int(i) not in lost],
-                               dtype=np.int64)
+            # ---- failure injection (scenario's failure model) --------
+            # Drawn before execution: who drops mid-round / misses the
+            # deadline is simulated, so the server never runs (or
+            # aggregates) their work.
+            completion_s = (ctx.sys.t_comm[selected]
+                            + ctx.sys.t_comp[selected] * plan.completion_epochs)
+            outcome = self.pool.draw_failures(self.rng, selected, completion_s)
+            lost = set(int(i) for i in outcome.lost)
+            survivors = np.asarray([i for i in selected if int(i) not in lost],
+                                   dtype=np.int64)
 
         # ---- completion stage (survivors only) -----------------------
-        if plan.completion_epochs > 0 and len(survivors):
-            reqs = build_requests(survivors, self._client_data,
-                                  plan.completion_epochs, seed=cfg.seed,
-                                  round_idx=ctx.round,
-                                  stride=COMPLETE_SEED_STRIDE,
-                                  init_params=probe_params)
-            completed = self._execute(reqs)
-            client_results: Dict[int, Params] = dict(completed.params)
-            # losses recorded from survivors only: a device that dropped or
-            # timed out never uploaded, so the server never saw its loss
-            for i in survivors:
-                losses = completed.losses[int(i)]
-                if len(losses):
-                    self.last_loss[i] = losses[-1]
-                    self.loss_age[i] = 0
-        else:
-            # no completion stage (l_ep == probe_epochs): probed params final
-            client_results = {int(i): probe_params[int(i)] for i in survivors
-                              if int(i) in probe_params}
+        with obs.span("complete"):
+            if plan.completion_epochs > 0 and len(survivors):
+                reqs = build_requests(survivors, self._client_data,
+                                      plan.completion_epochs, seed=cfg.seed,
+                                      round_idx=ctx.round,
+                                      stride=COMPLETE_SEED_STRIDE,
+                                      init_params=probe_params)
+                completed = self._execute(reqs)
+                client_results: Dict[int, Params] = dict(completed.params)
+                # losses recorded from survivors only: a device that dropped
+                # or timed out never uploaded, so the server never saw its
+                # loss
+                for i in survivors:
+                    losses = completed.losses[int(i)]
+                    if len(losses):
+                        self.last_loss[i] = losses[-1]
+                        self.loss_age[i] = 0
+            else:
+                # no completion stage (l_ep == probe_epochs): probed params
+                # final
+                client_results = {int(i): probe_params[int(i)] for i in survivors
+                                  if int(i) in probe_params}
 
         # stragglers' cost is sunk up to the round deadline; Bernoulli
         # failures are charged in full (they vanish at an unknown point)
@@ -514,40 +569,43 @@ class FLServer:
         # adversarial survivors upload corrupted params; the draw and the
         # corruption key off a dedicated (seed, round) RNG stream so the
         # engine's own RNG consumption is untouched (attack=None bit-parity)
-        adversaries = _empty_ids()
-        if self.attack is not None and len(selected):
-            adv = self.attack.draw(cfg.n_devices, cfg.seed, ctx.round,
-                                   selected)
-            adversaries = selected[adv]
-            for i in adversaries:
-                if int(i) in client_results:
-                    client_results[int(i)] = self.attack.corrupt(
-                        client_results[int(i)], self.global_params,
-                        cid=int(i), seed=cfg.seed, round_idx=ctx.round)
+        with obs.span("aggregate"):
+            adversaries = _empty_ids()
+            if self.attack is not None and len(selected):
+                adv = self.attack.draw(cfg.n_devices, cfg.seed, ctx.round,
+                                       selected)
+                adversaries = selected[adv]
+                for i in adversaries:
+                    if int(i) in client_results:
+                        client_results[int(i)] = self.attack.corrupt(
+                            client_results[int(i)], self.global_params,
+                            cid=int(i), seed=cfg.seed, round_idx=ctx.round)
 
-        if client_results:
-            weights = [self.data_sizes[i] for i in client_results]
-            self.global_params = robust_aggregate(
-                list(client_results.values()), weights, kind=cfg.aggregator,
-                trim=cfg.agg_trim, f=cfg.agg_f, m_select=cfg.agg_m or None)
+            if client_results:
+                weights = [self.data_sizes[i] for i in client_results]
+                self.global_params = robust_aggregate(
+                    list(client_results.values()), weights, kind=cfg.aggregator,
+                    trim=cfg.agg_trim, f=cfg.agg_f, m_select=cfg.agg_m or None)
 
         # ---- telemetry (deterministic: recording never perturbs a run) ---
-        tel = self.telemetry
-        tel.observe_availability(ctx.available)
-        tel.observe_selection(selected)
-        tel.observe_dropouts(outcome.failed)
-        tel.observe_stragglers(outcome.stragglers)
-        if len(survivors):
-            # same accounting as an async job: probe BARRIER (selection
-            # waits on the whole probe cohort) + comms + completion compute
-            barrier = (float(ctx.sys.t_comp[probe_ids].max())
-                       * plan.probe_epochs if plan.has_probe else 0.0)
-            dur = (barrier + ctx.sys.t_comm[survivors]
-                   + ctx.sys.t_comp[survivors] * plan.completion_epochs)
-            tel.observe_completions(survivors, dur)
-            # synchronous merges land immediately: version lag 0
-            tel.observe_staleness(survivors, np.zeros(len(survivors)))
-        tel.observe_cadence(r_t)
+        with obs.span("telemetry"):
+            tel = self.telemetry
+            tel.observe_availability(ctx.available)
+            tel.observe_selection(selected)
+            tel.observe_dropouts(outcome.failed)
+            tel.observe_stragglers(outcome.stragglers)
+            if len(survivors):
+                # same accounting as an async job: probe BARRIER (selection
+                # waits on the whole probe cohort) + comms + completion
+                # compute
+                barrier = (float(ctx.sys.t_comp[probe_ids].max())
+                           * plan.probe_epochs if plan.has_probe else 0.0)
+                dur = (barrier + ctx.sys.t_comm[survivors]
+                       + ctx.sys.t_comp[survivors] * plan.completion_epochs)
+                tel.observe_completions(survivors, dur)
+                # synchronous merges land immediately: version lag 0
+                tel.observe_staleness(survivors, np.zeros(len(survivors)))
+            tel.observe_cadence(r_t)
 
         acc, test_loss = self._evaluate()
         d_acc = acc - self._last_acc
@@ -562,10 +620,25 @@ class FLServer:
             cum_time=self._cum_time, cum_energy=self._cum_energy,
             failed=outcome.failed, stragglers=outcome.stragglers,
             adversaries=adversaries,
-            n_available=int(ctx.available.sum()))
+            n_available=int(ctx.available.sum()),
+            executor=self._executor_label)
         self.history.append(result)
-        policy.observe(ctx, result, probe_ids if plan.has_probe else None,
-                       probe_states)
+        with obs.span("observe"):
+            policy.observe(ctx, result, probe_ids if plan.has_probe else None,
+                           probe_states)
+        result.host_time_s = time.perf_counter() - t_host0
+        if obs.enabled:
+            m = obs.metrics
+            m.gauge("devices_online", result.n_available)
+            m.gauge("n_selected", len(selected))
+            m.count("failures", len(outcome.failed))
+            m.count("stragglers", len(outcome.stragglers))
+            m.count("adversaries_merged", len(adversaries))
+            obs.flush_round(round=result.round, mode="sync",
+                            host_time_s=result.host_time_s,
+                            executor=result.executor,
+                            virtual_time_s=result.cum_time, r_t=result.r_t,
+                            acc=result.acc)
         return result
 
     # ------------------------------------------------------------------
@@ -600,7 +673,8 @@ class FLServer:
             return self.run_async(policy, aggregations=rounds, verbose=verbose)
         for r in range(rounds or self.cfg.rounds):
             res = self.run_round(policy)
-            if verbose:
-                print(f"[{policy.name}] round {res.round:3d} acc={res.acc:.4f} "
-                      f"R_T={res.r_t:8.1f}s R_E={res.r_e:9.1f}J reward={res.reward:+.5f}")
+            self.log.log("round", force=verbose, policy=policy.name,
+                         round=res.round, acc=res.acc, r_t_s=res.r_t,
+                         r_e_j=res.r_e, reward=res.reward,
+                         host_s=res.host_time_s)
         return self.history

@@ -33,6 +33,8 @@ from typing import Optional, Tuple
 
 import numpy as np
 
+from repro.obs.profiling import timed_call
+
 
 def resolve_fleet_state_impl(impl: str = "auto") -> str:
     """Map "auto" to the backend-appropriate implementation; the
@@ -69,9 +71,14 @@ def segment_index(seg_key: np.ndarray, seg_dev: np.ndarray,
     tau = np.asarray(t_s, dtype=np.float64) % period_s
     src = np.asarray(src, dtype=np.int64)
     kind = resolve_fleet_state_impl(impl)
+    # timed_call is a passthrough unless a profiler is active
+    # (repro.obs.profiling); with one, every timeline lookup's wall-clock
+    # lands in the run record's op table under its backend name
     if kind == "numpy":
-        return np.searchsorted(seg_key, src * period_s + tau,
-                               side="right") - 1
+        return timed_call(
+            "fleet_state.numpy",
+            lambda: np.searchsorted(seg_key, src * period_s + tau,
+                                    side="right") - 1)
     src_b, tau_b = np.broadcast_arrays(src, tau)
     shape = src_b.shape
     sti, stf = _split_times(np.asarray(seg_t, np.float64))
@@ -80,10 +87,12 @@ def segment_index(seg_key: np.ndarray, seg_dev: np.ndarray,
     srcq = src_b.reshape(-1).astype(np.int32)
     if kind == "xla":
         from repro.kernels.fleet_state.ref import segment_index_ref
-        idx = segment_index_ref(sdev, sti, stf, srcq, qi, qf)
+        idx = timed_call("fleet_state.xla", segment_index_ref,
+                         sdev, sti, stf, srcq, qi, qf)
     else:
         from repro.kernels.fleet_state.kernel import segment_index_pallas
-        idx = segment_index_pallas(sdev, sti, stf, srcq, qi, qf)
+        idx = timed_call("fleet_state.pallas", segment_index_pallas,
+                         sdev, sti, stf, srcq, qi, qf)
     return np.asarray(idx, np.int64).reshape(shape)
 
 

@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.kernels.select_topk.kernel import select_topk_pallas
 from repro.kernels.select_topk.ref import NEG_INF, select_topk_ref
+from repro.obs.profiling import timed_call
 
 
 def resolve_select_impl(impl: str = "auto") -> str:
@@ -119,18 +120,24 @@ def select_topk(scores_fn: Union[dict, Callable[[np.ndarray], np.ndarray], None]
         feats = jnp.asarray(states, jnp.float32)
         mj = jnp.asarray(m, jnp.float32)
         bj = jnp.asarray(b)
+        # timed_call is a passthrough unless a profiler is active
+        # (repro.obs.profiling): then the call is block_until_ready-fenced
+        # and its wall-clock lands in the run record's op table
         if resolve_select_impl(impl) == "pallas":
-            vals, idx = select_topk_pallas(scores_fn, feats, mj, bj,
-                                           k=min(int(k), n))
+            vals, idx = timed_call("select_topk.pallas", select_topk_pallas,
+                                   scores_fn, feats, mj, bj, k=min(int(k), n))
         else:
-            vals, idx = select_topk_ref(scores_fn, feats, mj, bj,
-                                        k=min(int(k), n))
+            vals, idx = timed_call("select_topk.xla", select_topk_ref,
+                                   scores_fn, feats, mj, bj, k=min(int(k), n))
         return (np.asarray(idx[:k_eff], np.int64),
                 np.asarray(vals[:k_eff], np.float32))
 
-    scores = states if scores_fn is None else np.asarray(scores_fn(states))
-    scores = np.asarray(scores, np.float64)
-    if bias is not None:
-        scores = scores + np.asarray(bias, np.float64)
-    idx = topk_indices(scores, k_eff, m)
-    return idx, scores[idx]
+    def _host_select():
+        scores = states if scores_fn is None else np.asarray(scores_fn(states))
+        scores = np.asarray(scores, np.float64)
+        if bias is not None:
+            scores = scores + np.asarray(bias, np.float64)
+        idx = topk_indices(scores, k_eff, m)
+        return idx, scores[idx]
+
+    return timed_call("select_topk.host", _host_select)

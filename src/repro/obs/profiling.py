@@ -1,0 +1,77 @@
+"""Profiling hooks: attributable op timings + an optional jax.profiler gate.
+
+Kernel ops (:mod:`repro.kernels.select_topk.ops`,
+:mod:`repro.kernels.fleet_state.ops`) and the executors can't see which
+server (if any) is observing them, so op timing routes through a module
+global: a server whose recorder is enabled registers it with
+:func:`set_profiler`, and :func:`timed_call` becomes a timed,
+``jax.block_until_ready``-fenced call feeding
+:meth:`~repro.obs.recorder.RunRecorder.record_op`.  With no active
+profiler (the default) ``timed_call`` is a plain passthrough — one ``is
+None`` check per call, no timing, no device sync — so un-observed runs pay
+nothing and async dispatch keeps overlapping host work (the fence only
+exists while someone is measuring).
+
+:func:`trace_gate` wraps a block in ``jax.profiler.trace`` when a trace
+directory is supplied (argument or ``REPRO_JAX_TRACE`` env var), for
+XLA-level drill-down past the span layer.
+"""
+from __future__ import annotations
+
+import os
+import time
+from contextlib import contextmanager
+from typing import Optional
+
+_ACTIVE = None
+
+
+def set_profiler(recorder) -> None:
+    """Make ``recorder`` the destination for :func:`timed_call` timings."""
+    global _ACTIVE
+    _ACTIVE = recorder
+
+
+def clear_profiler(recorder=None) -> None:
+    """Deactivate profiling (pass the recorder to clear only if it is
+    still the active one — lets servers clean up without clobbering a
+    newer registration)."""
+    global _ACTIVE
+    if recorder is None or _ACTIVE is recorder:
+        _ACTIVE = None
+
+
+def active_profiler():
+    return _ACTIVE
+
+
+def timed_call(name: str, fn, *args, **kwargs):
+    """Call ``fn(*args, **kwargs)``; when a profiler is active, fence the
+    result with ``jax.block_until_ready`` (so device work is charged to
+    the op that launched it, not the next host sync) and record the
+    wall-clock under ``name``."""
+    prof = _ACTIVE
+    if prof is None:
+        return fn(*args, **kwargs)
+    import jax
+
+    t0 = time.perf_counter()
+    out = fn(*args, **kwargs)
+    out = jax.block_until_ready(out)
+    prof.record_op(name, time.perf_counter() - t0)
+    return out
+
+
+@contextmanager
+def trace_gate(out_dir: Optional[str] = None):
+    """Optionally wrap a block in a ``jax.profiler`` trace.  Active when
+    ``out_dir`` is given or ``REPRO_JAX_TRACE`` names a directory; a no-op
+    otherwise."""
+    target = out_dir or os.environ.get("REPRO_JAX_TRACE")
+    if not target:
+        yield
+        return
+    import jax
+
+    with jax.profiler.trace(target):
+        yield

@@ -58,13 +58,15 @@ ATTACK_CASES = [
 
 
 def _run_case(scenario, mode, policy_name, mlp_task, fl_data,
-              aggregator="fedavg", k=3):
+              aggregator="fedavg", k=3, extra_cfg=None):
     kw = dict(n_devices=20, k_select=k, rounds=3, l_ep=2, lr=0.1, seed=7,
               scenario=scenario)
     if aggregator != "fedavg":  # "fedavg" IS the plain mean — the default
         kw.update(aggregator=aggregator, agg_f=1, agg_trim=1)
     if mode == "async":
         kw.update(mode="async", async_concurrency=6, staleness="polynomial")
+    if extra_cfg:  # tests/test_obs.py reruns every case with observe=True
+        kw.update(extra_cfg)
     srv = FLServer(FLConfig(**kw), mlp_task, fl_data)
     pol_kw = {"k": k, "seed": 7} if policy_name == "fedrank" else {}
     hist = srv.run(build_policy(policy_name, **pol_kw))

@@ -1,0 +1,72 @@
+#!/usr/bin/env python
+"""Reduce an observability run record into a per-phase breakdown table.
+
+Usage::
+
+    PYTHONPATH=src python tools/obs_report.py RUN [--check] [--json OUT]
+
+``RUN`` is a run directory written by ``FLConfig.observe`` (holding
+``manifest.json`` + ``run.jsonl``) or a bare ``.jsonl`` path.  Prints the
+per-phase host-wall / virtual-time table and the profiled-op table
+(:mod:`repro.obs.report`).  ``--check`` additionally validates the record
+— schema keys on every round, top-level spans summing (within tolerance)
+to the measured round wall-time — and exits non-zero on problems (the CI
+obs-smoke gate).  ``--json`` writes the reduced tables machine-readably.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.obs.report import (
+    check_run,
+    coverage,
+    load_run,
+    op_table,
+    phase_table,
+    render,
+)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("run", help="run directory (manifest.json + run.jsonl) "
+                               "or a .jsonl path")
+    ap.add_argument("--check", action="store_true",
+                    help="validate schema + span/wall coverage; exit 1 on "
+                         "problems")
+    ap.add_argument("--min-coverage", type=float, default=0.5,
+                    help="--check: minimum top-level span share of measured "
+                         "wall (default 0.5)")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="also write the reduced tables to this JSON path")
+    args = ap.parse_args(argv)
+
+    manifest, rounds, events = load_run(args.run)
+    print(render(manifest, rounds, events))
+
+    if args.json_out:
+        with open(args.json_out, "w") as fh:
+            json.dump({"manifest": manifest,
+                       "phases": phase_table(rounds),
+                       "ops": op_table(rounds),
+                       "coverage": coverage(rounds),
+                       "n_rounds": len(rounds),
+                       "n_events": len(events)}, fh, indent=2)
+            fh.write("\n")
+
+    if args.check:
+        problems = check_run(rounds, min_coverage=args.min_coverage)
+        if problems:
+            print("\nCHECK FAILED:", file=sys.stderr)
+            for p in problems:
+                print(f"  - {p}", file=sys.stderr)
+            return 1
+        print(f"\ncheck ok: {len(rounds)} rounds, "
+              f"coverage={coverage(rounds):.1%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
